@@ -1,0 +1,35 @@
+"""Paper Exp-10: scalability vs machine count.
+
+Single-process CI box: we scale the *simulated* cluster size k and report the
+communication totals and per-machine balance (the distributed-engine wall
+clock scaling is measured separately by tests/test_distributed.py on 8 host
+devices). Load balance std/mean mirrors the paper's Exp-8 metric.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import bench_graph, emit
+from repro.core.engine import EngineConfig, HugeEngine
+from repro.core.query import PAPER_QUERIES
+
+
+def main():
+    graph = bench_graph()
+    for qname in ("q1", "q2"):
+        for k in (1, 2, 4, 8, 16):
+            cfg = EngineConfig(num_machines=k, batch_size=1024, cache_capacity=1 << 13)
+            eng = HugeEngine(graph, cfg, track_balance=True)
+            res = eng.run(PAPER_QUERIES[qname])
+            s = res.stats
+            bal = s.per_machine_rows.astype(float)
+            cv = float(bal.std() / max(bal.mean(), 1e-9)) if k > 1 else 0.0
+            emit(
+                f"exp10/k={k}/{qname}",
+                s.wall_time * 1e6,
+                f"C={s.total_comm_bytes / 1e6:.2f}MB;balance_cv={cv:.3f};count={res.count}",
+            )
+
+
+if __name__ == "__main__":
+    main()

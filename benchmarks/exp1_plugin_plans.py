@@ -1,0 +1,41 @@
+"""Paper Exp-1: plug existing systems' *logical* plans into HUGE.
+
+Remark 3.2: feed each prior system's logical plan through HUGE's physical
+configuration (Eq. 3) and compare against the same logical plan under the
+system's own physical settings — the speedup is HUGE's hybrid communication +
+engine, cost model and scheduling held fixed.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.common import bench_graph, emit, run_query
+from repro.core.plan import PLAN_SPACES, PlanSpace
+
+
+def _hugeified(space_name: str) -> PlanSpace:
+    """Same logical space (units/order), HUGE's physical freedom (Eq. 3)."""
+    base = PLAN_SPACES[space_name]
+    return dataclasses.replace(
+        base, name=f"huge-{space_name}", algos=("hash", "wco"), comms=("push", "pull")
+    )
+
+
+def main():
+    graph = bench_graph()
+    for qname in ("q1", "q2"):
+        for system in ("benu", "rads", "seed", "bigjoin"):
+            native = run_query(graph, qname, space=system)
+            hugeed = run_query(graph, qname, space=_hugeified(system))
+            assert native.count == hugeed.count, (system, qname)
+            speed = native.stats.wall_time / max(hugeed.stats.wall_time, 1e-9)
+            comm = native.stats.total_comm_bytes / max(hugeed.stats.total_comm_bytes, 1)
+            emit(
+                f"exp1/HUGE-{system.upper()}/{qname}",
+                hugeed.stats.wall_time * 1e6,
+                f"speedup={speed:.2f}x;comm_reduction={comm:.2f}x;count={hugeed.count}",
+            )
+
+
+if __name__ == "__main__":
+    main()

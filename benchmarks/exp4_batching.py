@@ -1,0 +1,28 @@
+"""Paper Exp-4: effect of batch size (cache disabled, as in the paper).
+
+Larger batches aggregate more pull requests per round (merged RPCs): measured
+as pulled bytes (dedup within batch) and wall time.
+"""
+from __future__ import annotations
+
+from benchmarks.common import bench_graph, emit, run_query
+
+
+def main():
+    graph = bench_graph()
+    for qname in ("q1", "q3"):
+        base = None
+        for batch in (128, 256, 512, 1024):
+            res = run_query(graph, qname, batch_size=batch, cache_capacity=0)
+            s = res.stats
+            base = base or s.pulled_bytes
+            emit(
+                f"exp4/batch={batch}/{qname}",
+                s.wall_time * 1e6,
+                f"pulled={s.pulled_bytes / 1e6:.2f}MB;"
+                f"dedup_gain={base / max(s.pulled_bytes, 1):.2f}x;count={res.count}",
+            )
+
+
+if __name__ == "__main__":
+    main()

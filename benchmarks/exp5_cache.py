@@ -1,0 +1,21 @@
+"""Paper Exp-5: cache capacity sweep — hit rate and pulled bytes vs capacity."""
+from __future__ import annotations
+
+from benchmarks.common import bench_graph, emit, run_query
+
+
+def main():
+    graph = bench_graph()
+    for qname in ("q1", "q2"):
+        for cap in (0, 1 << 10, 1 << 12, 1 << 14, 1 << 16):
+            res = run_query(graph, qname, cache_capacity=cap)
+            s = res.stats
+            emit(
+                f"exp5/cache={cap}/{qname}",
+                s.wall_time * 1e6,
+                f"hit_rate={s.hit_rate:.3f};pulled={s.pulled_bytes / 1e6:.2f}MB;count={res.count}",
+            )
+
+
+if __name__ == "__main__":
+    main()

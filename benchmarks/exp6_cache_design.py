@@ -1,0 +1,28 @@
+"""Paper Exp-6: cache design comparison.
+
+The paper compares LRBU vs copy/lock variants in wall time; locks don't exist
+in a JAX SPMD program (the two-stage execution *is* the lock-freedom — see
+DESIGN.md), so the comparable axis here is the replacement policy under the
+same two-stage execution: LRBU (epoch-sealed) vs classic LRU vs direct-mapped.
+Measured as hit rate / pulled bytes at equal capacity.
+"""
+from __future__ import annotations
+
+from benchmarks.common import bench_graph, emit, run_query
+
+
+def main():
+    graph = bench_graph()
+    for qname in ("q1", "q2", "q3"):
+        for policy in ("lrbu", "lru", "direct"):
+            res = run_query(graph, qname, cache_policy=policy, cache_capacity=1 << 12)
+            s = res.stats
+            emit(
+                f"exp6/{policy}/{qname}",
+                s.wall_time * 1e6,
+                f"hit_rate={s.hit_rate:.3f};pulled={s.pulled_bytes / 1e6:.2f}MB;count={res.count}",
+            )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Paper Exp-7 (Figure 9): queue size sweeps DFS ↔ adaptive ↔ BFS.
+
+Queue capacity 1 batch ≈ DFS; huge ≈ BFS. We report wall time and peak queue
+memory; the paper's OOM at the BFS end appears here as peak memory growth
+(bounded only by the preallocated capacity — allocation failure on real HW).
+"""
+from __future__ import annotations
+
+from benchmarks.common import bench_graph, emit, run_query
+
+
+def main():
+    graph = bench_graph()
+    qname = "q1"
+    for qcap in (1 << 10, 1 << 13, 1 << 15, 1 << 17, 1 << 19):
+        res = run_query(graph, qname, queue_capacity=qcap, batch_size=256)
+        s = res.stats
+        emit(
+            f"exp7/queue={qcap}/{qname}",
+            s.wall_time * 1e6,
+            f"peakM={s.peak_queue_bytes / 1e6:.2f}MB;steps={res.schedule.steps};"
+            f"yields_full={res.schedule.yields_full};count={res.count}",
+        )
+
+
+if __name__ == "__main__":
+    main()

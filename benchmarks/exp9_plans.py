@@ -1,0 +1,32 @@
+"""Paper Exp-9: hybrid plan comparison — wco-only vs sequential-context hybrid
+planners (EmptyHeaded/GraphFlow ≈ computation-only cost) vs HUGE (computation
++ communication cost)."""
+from __future__ import annotations
+
+from benchmarks.common import bench_graph, emit, run_query
+
+
+def main():
+    graph = bench_graph(n=1 << 10, deg=5.0)  # GO-like (paper uses GO here)
+    for qname in ("q7", "q8"):
+        for label, space in (
+            ("HUGE-WCO", "bigjoin"),
+            ("HUGE-EH", "emptyheaded"),
+            ("HUGE", "huge"),
+        ):
+            try:
+                res = run_query(graph, qname, space=space, queue_capacity=1 << 18,
+                                batch_size=128, join_out_capacity=1 << 21)
+            except ValueError as e:  # plan infeasible in this space
+                emit(f"exp9/{label}/{qname}", 0.0, f"infeasible:{e}")
+                continue
+            s = res.stats
+            emit(
+                f"exp9/{label}/{qname}",
+                s.wall_time * 1e6,
+                f"T={s.wall_time:.2f}s;C={s.total_comm_bytes / 1e6:.2f}MB;count={res.count}",
+            )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,80 @@
+"""Perf-iteration helper: lower one cell, print roofline terms + per-op-kind
+HBM byte breakdown + collectives. Writes JSON so iterations are diffable
+(§Perf methodology: hypothesis → change → re-lower → compare).
+
+    PYTHONPATH=src python -m benchmarks.perf_cell --arch rwkv6-7b --shape train_4k --tag baseline
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+import argparse
+import json
+import time
+
+import jax
+
+from repro.configs import SHAPES, get_config
+from repro.launch import hlo_counter
+from repro.launch.dryrun import _make_mesh
+from repro.launch.mesh import DCI_BW, HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+from repro.launch.specs import input_specs
+from repro.models import sharding as shd
+
+
+def measure(arch: str, shape_name: str, mesh_kind: str, overrides=None):
+    cfg = get_config(arch)
+    if overrides:
+        cfg = cfg.scaled(**overrides)
+    shape = SHAPES[shape_name]
+    mesh = _make_mesh(mesh_kind == "multi")
+    t0 = time.time()
+    with shd.activate(mesh), mesh:
+        cell = input_specs(cfg, shape, mesh)
+        compiled = (
+            jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                    donate_argnums=cell.donate_argnums)
+            .lower(*cell.args)
+            .compile()
+        )
+    txt = compiled.as_text()
+    c = hlo_counter.analyze(txt)
+    link = DCI_BW if mesh_kind == "multi" else ICI_BW
+    mem = compiled.memory_analysis()
+    out = {
+        "meta": cell.meta,
+        "compute_s": c.flops / PEAK_FLOPS_BF16,
+        "memory_s": c.bytes / HBM_BW,
+        "collective_s": c.coll_total / link,
+        "flops": c.flops,
+        "hbm_bytes": c.bytes,
+        "coll": dict(c.coll),
+        "coll_calls": dict(c.coll_calls),
+        "by_kind": dict(sorted(c.by_kind.items(), key=lambda kv: -kv[1])[:12]),
+        "temp_bytes": int(mem.temp_size_in_bytes),
+        "arg_bytes": int(mem.argument_size_in_bytes),
+        "compile_s": round(time.time() - t0, 1),
+    }
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--tag", default="iter")
+    ap.add_argument("--out", default="reports/perf")
+    args = ap.parse_args()
+    r = measure(args.arch, args.shape, args.mesh)
+    os.makedirs(args.out, exist_ok=True)
+    path = os.path.join(args.out, f"{args.arch}__{args.shape}__{args.mesh}__{args.tag}.json")
+    with open(path, "w") as f:
+        json.dump(r, f, indent=2)
+    bound = max(r["compute_s"], r["memory_s"], r["collective_s"])
+    print(json.dumps({k: v for k, v in r.items() if k not in ("by_kind", "coll_calls")}, indent=2))
+    print("by_kind (TB):", {k: round(v / 1e12, 3) for k, v in r["by_kind"].items()})
+    print("coll_calls:", r["coll_calls"])
+    print(f"bound={bound:.2f}s  roofline_frac={r['compute_s'] / bound:.2%}")
+
+
+if __name__ == "__main__":
+    main()

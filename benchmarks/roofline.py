@@ -1,0 +1,90 @@
+"""§Roofline: aggregate the dry-run JSONs into the per-cell roofline table.
+
+Terms (per device, per step; TPU v5e constants in launch/mesh.py):
+  compute    = counted HLO dot-FLOPs / 197e12
+  memory     = counted HBM traffic   / 819e9
+  collective = counted wire bytes    / 50e9 (ICI) | 25e9 (DCI multi-pod)
+
+"counted" = hlo_counter static analysis with while-loop trip multiplication
+(XLA's cost_analysis counts loop bodies once — see hlo_counter.py).
+
+Usage:
+  python -m benchmarks.roofline                    # table from reports/dryrun
+  python -m benchmarks.roofline --dir A --compare B   # perf-iteration diff
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+DEFAULT_DIR = os.path.join(os.path.dirname(__file__), "..", "reports", "dryrun")
+
+
+def load(d):
+    out = {}
+    for f in glob.glob(os.path.join(d, "*.json")):
+        with open(f) as fh:
+            r = json.load(fh)
+        out[(r["arch"], r["shape"], r["mesh"])] = r
+    return out
+
+
+def fmt_s(x):
+    if x is None:
+        return "-"
+    if x >= 1:
+        return f"{x:7.2f}s"
+    return f"{x * 1e3:6.1f}ms"
+
+
+def row(r):
+    if r.get("skip"):
+        return f"{r['arch']:24s} {r['shape']:12s} {r['mesh']:6s}  {r['skip']}"
+    if not r.get("ok"):
+        return f"{r['arch']:24s} {r['shape']:12s} {r['mesh']:6s}  FAIL: {str(r.get('error'))[:70]}"
+    rf = r["roofline"]
+    bound = max(rf["compute_s"], rf["memory_s"], rf["collective_s"])
+    frac = rf["compute_s"] / max(bound, 1e-12)
+    return (
+        f"{r['arch']:24s} {r['shape']:12s} {r['mesh']:6s}  "
+        f"C={fmt_s(rf['compute_s'])} M={fmt_s(rf['memory_s'])} "
+        f"X={fmt_s(rf['collective_s'])}  dom={rf['dominant']:10s} "
+        f"roofline_frac={frac:5.1%} useful={r.get('useful_ratio', 0):5.1%}"
+    )
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default=DEFAULT_DIR)
+    ap.add_argument("--compare", default=None, help="second reports dir to diff")
+    ap.add_argument("--mesh", default=None, choices=["single", "multi"])
+    args = ap.parse_args(argv)
+
+    recs = load(args.dir)
+    keys = sorted(recs)
+    print(f"== roofline table ({len(keys)} cells) ==")
+    for k in keys:
+        if args.mesh and k[2] != args.mesh:
+            continue
+        print(row(recs[k]))
+
+    if args.compare:
+        other = load(args.compare)
+        print(f"\n== diff vs {args.compare} ==")
+        for k in sorted(set(recs) & set(other)):
+            a, b = recs[k], other[k]
+            if not (a.get("ok") and b.get("ok")):
+                continue
+            ra, rb = a["roofline"], b["roofline"]
+            ba = max(ra["compute_s"], ra["memory_s"], ra["collective_s"])
+            bb = max(rb["compute_s"], rb["memory_s"], rb["collective_s"])
+            print(
+                f"{k[0]:24s} {k[1]:12s} {k[2]:6s} bound {fmt_s(ba)} -> {fmt_s(bb)} "
+                f"({ba / max(bb, 1e-12):.2f}x) dom {ra['dominant']}->{rb['dominant']}"
+            )
+
+
+if __name__ == "__main__":
+    main()

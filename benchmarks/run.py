@@ -1,0 +1,51 @@
+"""Benchmark harness entry point — one module per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run``           (all, CSV to stdout)
+``PYTHONPATH=src python -m benchmarks.run table1``    (one table)
+
+Each function prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+from benchmarks import (
+    exp1_plugin_plans,
+    exp4_batching,
+    exp5_cache,
+    exp6_cache_design,
+    exp7_scheduling,
+    exp9_plans,
+    exp10_scaling,
+    table1_comm_modes,
+    table4_throughput,
+)
+
+SUITES = {
+    "table1": table1_comm_modes.main,
+    "exp1": exp1_plugin_plans.main,
+    "exp4": exp4_batching.main,
+    "exp5": exp5_cache.main,
+    "exp6": exp6_cache_design.main,
+    "exp7": exp7_scheduling.main,
+    "exp9": exp9_plans.main,
+    "exp10": exp10_scaling.main,
+    "table4": table4_throughput.main,
+}
+
+
+def main() -> None:
+    wanted = sys.argv[1:] or list(SUITES)
+    print("name,us_per_call,derived")
+    for name in wanted:
+        t0 = time.time()
+        try:
+            SUITES[name]()
+        except Exception as e:  # noqa: BLE001 — keep the suite running
+            print(f"{name}/ERROR,0.0,{type(e).__name__}:{e}")
+        print(f"{name}/_suite_wall,{(time.time() - t0) * 1e6:.0f},done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""Paper Table 4: enumeration throughput (matches/second) on the largest
+CI-scale graph, queries q1-q3."""
+from __future__ import annotations
+
+from benchmarks.common import bench_graph, emit, run_query
+
+
+def main():
+    graph = bench_graph(n=1 << 12, deg=8.0)
+    for qname in ("q1", "q2", "q3"):
+        res = run_query(graph, qname, batch_size=1024, queue_capacity=1 << 17)
+        s = res.stats
+        thr = res.count / max(s.wall_time, 1e-9)
+        emit(
+            f"table4/{qname}",
+            s.wall_time * 1e6,
+            f"throughput={thr:,.0f}/s;count={res.count};M={s.peak_queue_bytes / 1e6:.1f}MB",
+        )
+
+
+if __name__ == "__main__":
+    main()

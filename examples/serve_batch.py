@@ -1,0 +1,25 @@
+"""Batched serving example: prefill + slot-based continuous decode.
+
+    PYTHONPATH=src python examples/serve_batch.py --arch rwkv6-7b
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch.serve import main as serve_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="rwkv6-7b")
+    args = ap.parse_args()
+    serve_main([
+        "--arch", args.arch, "--smoke",
+        "--requests", "12", "--prompt-len", "24", "--max-new", "24",
+        "--slots", "4", "--temperature", "0.8",
+    ])
+
+
+if __name__ == "__main__":
+    main()

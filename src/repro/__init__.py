@@ -1,0 +1,5 @@
+"""repro — HUGE (push/pull-hybrid subgraph enumeration) on JAX/TPU, plus an
+LM training/serving framework built on the paper's communication/scheduling
+ideas. See README.md, DESIGN.md, EXPERIMENTS.md."""
+
+__version__ = "1.0.0"

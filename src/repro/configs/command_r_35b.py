@@ -1,0 +1,27 @@
+"""command-r-35b [dense] — 40L d_model=8192 64H (GQA kv=8) d_ff=22528
+vocab=256000. GQA, no-bias. [hf:CohereForAI/c4ai-command-r-v01; unverified]"""
+from repro.models.transformer import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="command-r-35b",
+        family="dense",
+        num_layers=40,
+        d_model=8192,
+        num_heads=64,
+        num_kv_heads=8,
+        head_dim=128,
+        d_ff=22528,
+        vocab_size=256000,
+        rope_theta=1e4,
+        qkv_bias=False,
+        tie_embeddings=True,
+    )
+
+
+def smoke() -> ModelConfig:
+    return config().scaled(
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=2, head_dim=16,
+        d_ff=128, vocab_size=256, attn_chunk=64,
+    )

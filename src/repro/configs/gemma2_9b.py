@@ -1,0 +1,31 @@
+"""gemma2-9b [dense] — 42L d_model=3584 16H (GQA kv=8) d_ff=14336
+vocab=256000. Local+global alternating attention, logit softcap.
+[arXiv:2408.00118; hf]"""
+from repro.models.transformer import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="gemma2-9b",
+        family="dense",
+        num_layers=42,
+        d_model=3584,
+        num_heads=16,
+        num_kv_heads=8,
+        head_dim=256,
+        d_ff=14336,
+        vocab_size=256000,
+        layer_pattern=("attn_local", "attn"),   # alternating 4k-window / global
+        local_window=4096,
+        attn_softcap=50.0,
+        logit_softcap=30.0,
+        rope_theta=1e4,
+        tie_embeddings=True,
+    )
+
+
+def smoke() -> ModelConfig:
+    return config().scaled(
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=2, head_dim=16,
+        d_ff=128, vocab_size=256, local_window=16, attn_chunk=64,
+    )

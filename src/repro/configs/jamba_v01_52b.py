@@ -1,0 +1,39 @@
+"""jamba-v0.1-52b [hybrid] — 32L d_model=4096 32H (GQA kv=8) d_ff=14336
+vocab=65536, MoE 16 experts top-2. Mamba:attention 7:1 interleave (one
+attention layer per 8-layer block, at position 4), MoE every other layer.
+[arXiv:2403.19887; hf]"""
+from repro.models.transformer import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="jamba-v0.1-52b",
+        family="hybrid",
+        num_layers=32,
+        d_model=4096,
+        num_heads=32,
+        num_kv_heads=8,
+        head_dim=128,
+        d_ff=14336,
+        vocab_size=65536,
+        layer_pattern=(
+            "mamba", "mamba", "mamba", "mamba", "attn", "mamba", "mamba", "mamba",
+        ),
+        mlp_pattern=("dense", "moe"),
+        num_experts=16,
+        experts_per_token=2,
+        moe_d_ff=14336,
+        moe_comm="auto",
+        ssm_state=16,
+        ssm_conv=4,
+        mamba_expand=2,
+        sub_quadratic=True,   # mamba state + 4 attention layers → long_500k runs
+    )
+
+
+def smoke() -> ModelConfig:
+    return config().scaled(
+        num_layers=8, d_model=64, num_heads=4, num_kv_heads=2, head_dim=16,
+        d_ff=64, vocab_size=256, num_experts=4, experts_per_token=2,
+        moe_d_ff=64, attn_chunk=64,
+    )

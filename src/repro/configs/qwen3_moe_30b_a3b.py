@@ -1,0 +1,36 @@
+"""qwen3-moe-30b-a3b [moe] — 48L d_model=2048 32H (GQA kv=4) d_ff=768
+vocab=151936, MoE 128 experts top-8. Every layer is MoE (768-wide experts).
+[hf:Qwen/Qwen3-30B-A3B; hf]
+
+This is the most paper-representative LM cell: the expert dispatch is the
+hash-join shuffle and HUGE's push/pull-hybrid rule picks the collective.
+"""
+from repro.models.transformer import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen3-moe-30b-a3b",
+        family="moe",
+        num_layers=48,
+        d_model=2048,
+        num_heads=32,
+        num_kv_heads=4,
+        head_dim=128,
+        d_ff=768,
+        vocab_size=151936,
+        mlp_pattern=("moe",),
+        num_experts=128,
+        experts_per_token=8,
+        moe_d_ff=768,
+        moe_comm="auto",
+        rope_theta=1e6,
+    )
+
+
+def smoke() -> ModelConfig:
+    return config().scaled(
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=2, head_dim=16,
+        d_ff=64, vocab_size=256, num_experts=8, experts_per_token=2,
+        moe_d_ff=64, attn_chunk=64,
+    )

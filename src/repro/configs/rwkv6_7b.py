@@ -1,0 +1,33 @@
+"""rwkv6-7b [ssm] — Finch: 32L d_model=4096 (attention-free) d_ff=14336
+vocab=65536. Data-dependent decay linear recurrence (head size 64).
+[arXiv:2404.05892; hf]
+
+HUGE applicability: token mixing is attention-free — there is no sparse
+dispatch join to configure, so the push/pull-hybrid rule is inapplicable to
+the mixer (recorded in DESIGN.md §Arch-applicability); the adaptive
+microbatch scheduler still applies.
+"""
+from repro.models.transformer import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="rwkv6-7b",
+        family="ssm",
+        num_layers=32,
+        d_model=4096,
+        num_heads=64,            # head size 64
+        num_kv_heads=64,
+        head_dim=64,
+        d_ff=14336,
+        vocab_size=65536,
+        layer_pattern=("rwkv",),
+        sub_quadratic=True,      # O(1)-state decode → long_500k runs
+    )
+
+
+def smoke() -> ModelConfig:
+    return config().scaled(
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=4, head_dim=16,
+        d_ff=128, vocab_size=256, attn_chunk=64,
+    )

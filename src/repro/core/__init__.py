@@ -1,0 +1,19 @@
+"""The paper's contribution, as composable JAX modules.
+
+Plan layer:   query, plan, cost, optimizer (Alg. 1), dataflow (Alg. 2)
+Engine layer: operators, cache (LRBU, Alg. 3/4), scheduler (Alg. 5),
+              engine (single-process + comm accounting),
+              distributed (shard_map SPMD engine)
+LM bridges:   hybrid_comm (Eq. 3 for MoE/vocab joins),
+              adaptive_schedule (Alg. 5 for training microbatches)
+Applications: paths (paper §6: shortest / hop-constrained paths)
+"""
+from repro.core.engine import EngineConfig, HugeEngine, enumerate_query
+from repro.core.optimizer import optimal_plan
+from repro.core.dataflow import translate
+from repro.core.query import PAPER_QUERIES, QueryGraph
+
+__all__ = [
+    "EngineConfig", "HugeEngine", "enumerate_query",
+    "optimal_plan", "translate", "PAPER_QUERIES", "QueryGraph",
+]

@@ -1,0 +1,300 @@
+"""Distributed HUGE engine: shard_map SPMD execution of PULL-EXTEND chains.
+
+This is the real-collective counterpart of engine.py: the graph is hash-
+partitioned over the mesh axis ``shards`` (paper §2), partial matches live on
+their producing shard, and each PULL-EXTEND executes the paper's two-stage
+strategy with actual communication:
+
+  fetch stage     dedup the batch's remote vertices (merged-RPC aggregation),
+                  route requests to their owners with an ``all_to_all``,
+                  gather CSR rows, return them with a second ``all_to_all``
+                  — the GetNbrs RPC as a dense collective;
+  intersect stage read-only: Eq. 2 membership over local partition + the
+                  fetched table (zero-copy in the paper's sense: pure gather);
+  stealing        each batch's results are re-spread evenly with one more
+                  ``all_to_all`` (proactive inter-machine work stealing, §5.3
+                  — see DESIGN.md on why SPMD makes stealing deterministic).
+
+Scope: extend/verify-chain dataflows (wco plans — the paper's core path).
+Plans with PUSH-JOIN barriers run on the single-process engine (the
+distributed shuffle join is the same hash-a2a machinery; DESIGN.md).
+
+Memory bound: every queue is a preallocated [P, CAP, K] device array — the
+paper's Theorem 5.4 bound is structural.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.core import operators as ops_mod
+from repro.core.dataflow import Dataflow, OpDesc, translate
+from repro.core.optimizer import optimal_plan
+from repro.core.cost import GraphStats
+from repro.core.query import QueryGraph
+from repro.graph.partition import partition_graph
+from repro.graph.storage import Graph, INVALID
+
+
+@dataclasses.dataclass
+class DistConfig:
+    batch_size: int = 256
+    queue_capacity: int = 1 << 16
+    axis: str = "shards"
+    rebalance: bool = True           # inter-machine work stealing
+
+
+def wco_chain(flow: Dataflow) -> Optional[List[OpDesc]]:
+    """The op chain if the dataflow is a pure scan→(extend|verify)*→sink line."""
+    ops = flow.ops
+    if ops[0].kind != "scan" or ops[-1].kind != "sink":
+        return None
+    for op in ops[1:-1]:
+        if op.kind not in ("extend", "verify"):
+            return None
+    return list(ops)
+
+
+class DistributedEngine:
+    def __init__(self, graph: Graph, mesh: Mesh, cfg: DistConfig | None = None):
+        self.cfg = cfg or DistConfig()
+        self.mesh = mesh
+        self.axis = self.cfg.axis
+        self.p = mesh.shape[self.axis]
+        self.pg = partition_graph(graph, self.p)
+        self.graph = graph
+        self.v = graph.num_vertices
+        self.d_pad = self.pg.d_pad
+        self.sh = lambda ndim: NamedSharding(mesh, P(self.axis, *([None] * (ndim - 1))))
+        self.adj = jax.device_put(self.pg.adj, self.sh(3))
+        # per-shard directed edge lists, padded to the max shard size
+        offsets = np.asarray(graph.offsets)
+        deg_np = np.diff(offsets)
+        src_all = np.repeat(np.arange(self.v, dtype=np.int32), deg_np)
+        dst_all = np.asarray(graph.nbrs, dtype=np.int32)
+        owners = src_all % self.p
+        b = self.cfg.batch_size
+        max_e = max(int((owners == p).sum()) for p in range(self.p))
+        max_e = max(b, ((max_e + b - 1) // b) * b)
+        src = np.zeros((self.p, max_e), np.int32)
+        dst = np.full((self.p, max_e), INVALID, np.int32)
+        totals = np.zeros((self.p,), np.int32)
+        for p in range(self.p):
+            sel = owners == p
+            n = int(sel.sum())
+            src[p, :n] = src_all[sel]
+            dst[p, :n] = dst_all[sel]
+            totals[p] = n
+        self.src = jax.device_put(jnp.asarray(src), self.sh(2))
+        self.dst = jax.device_put(jnp.asarray(dst), self.sh(2))
+        self.scan_totals = jax.device_put(jnp.asarray(totals), self.sh(1))
+        self.stats: Dict[str, float] = {}
+
+    # ------------------------------------------------------------------
+    # shard-local pieces (inside shard_map; no leading P dim)
+    # ------------------------------------------------------------------
+
+    def _fetch(self, adj, rows, valid_rows, ext):
+        """Fetch stage: dedup needed vids, owner-routed exchange, return a
+        sorted lookup table (vids, adjacency rows)."""
+        p, axis = self.p, self.axis
+        vids = rows[:, list(ext)].reshape(-1)
+        ok = (
+            (vids != INVALID)
+            & (vids >= 0)
+            & jnp.repeat(valid_rows[:, None], len(ext), 1).reshape(-1)
+        )
+        r_cap = vids.shape[0]
+        owner = jnp.where(ok, vids % p, p)
+        key = jnp.where(ok, owner * self.v + vids, p * self.v)
+        skey = jnp.sort(key)
+        uniq = (skey < p * self.v) & jnp.concatenate(
+            [jnp.ones((1,), bool), skey[1:] != skey[:-1]]
+        )
+        o_s = jnp.where(uniq, skey // self.v, p)
+        v_s = jnp.where(uniq, skey % self.v, INVALID)
+        cnt = jax.ops.segment_sum(uniq.astype(jnp.int32), o_s, num_segments=p + 1)[:p]
+        offs = jnp.cumsum(cnt) - cnt
+        rank = jnp.cumsum(uniq.astype(jnp.int32)) - 1
+        slot = rank - jnp.take(
+            jnp.concatenate([offs, jnp.zeros(1, jnp.int32)]), jnp.minimum(o_s, p)
+        )
+        reqs = jnp.full((p, r_cap), INVALID, jnp.int32).at[
+            jnp.where(uniq, o_s, p), jnp.where(uniq, slot, r_cap)
+        ].set(v_s, mode="drop")
+        got = jax.lax.all_to_all(reqs, axis, split_axis=0, concat_axis=0, tiled=True)
+        lid = jnp.clip(jnp.where(got != INVALID, got // p, 0), 0, adj.shape[0] - 1)
+        served = jnp.take(adj, lid.reshape(-1), axis=0).reshape(p, r_cap, -1)
+        served = jnp.where((got != INVALID)[:, :, None], served, INVALID)
+        back = jax.lax.all_to_all(served, axis, split_axis=0, concat_axis=0, tiled=True)
+        back_vids = reqs.reshape(-1)
+        order = jnp.argsort(back_vids)
+        return jnp.take(back_vids, order), jnp.take(
+            back.reshape(-1, adj.shape[-1]), order, axis=0
+        )
+
+    def _lookup(self, table_vids, table_rows, adj, vids):
+        p = self.p
+        me = jax.lax.axis_index(self.axis)
+        ok = (vids != INVALID) & (vids >= 0)
+        local = ok & ((vids % p) == me)
+        lrows = jnp.take(
+            adj, jnp.clip(jnp.where(ok, vids // p, 0), 0, adj.shape[0] - 1), axis=0
+        )
+        idx = jnp.clip(jnp.searchsorted(table_vids, vids), 0, table_vids.shape[0] - 1)
+        hit = jnp.take(table_vids, idx) == vids
+        rrows = jnp.take(table_rows, idx, axis=0)
+        rows = jnp.where(local[:, None], lrows, jnp.where(hit[:, None], rrows, INVALID))
+        return jnp.where(ok[:, None], rows, INVALID)
+
+    # ------------------------------------------------------------------
+    # jitted shard_map step programs
+    # ------------------------------------------------------------------
+
+    def _shardmap(self, f, n_in, n_out):
+        ax = self.axis
+        return jax.jit(
+            shard_map(
+                f,
+                mesh=self.mesh,
+                in_specs=tuple(P(ax) for _ in range(n_in)),
+                out_specs=tuple(P(ax) for _ in range(n_out)) if n_out > 1 else P(ax),
+                check_rep=False,
+            )
+        )
+
+    def _build_scan_step(self, op: OpDesc):
+        b = self.cfg.batch_size
+        lt, gt = op.lt_positions, op.gt_positions
+
+        def f(src, dst, total, cursor, qbuf, qn):
+            rows, n = ops_mod.scan_batch(src[0], dst[0], cursor[0], total[0], b, lt, gt)
+            buf, n2 = ops_mod.queue_append(qbuf[0], qn[0], rows, n)
+            return buf[None], n2[None]
+
+        return self._shardmap(f, 6, 2)
+
+    def _build_extend_step(self, op: OpDesc, is_verify: bool):
+        b = self.cfg.batch_size
+        ext, lt, gt = op.ext, op.lt_positions, op.gt_positions
+        vpos = op.verify_pos
+        rebalance = self.cfg.rebalance
+        p = self.p
+
+        def f(adj3, in_buf, in_n, out_buf, out_n):
+            adj = adj3[0]
+            rows, take, rem = ops_mod.queue_pop(in_buf[0], in_n[0], b)
+            valid = jnp.arange(b) < take
+            tv, tr = self._fetch(adj, rows, valid, ext)
+            k = rows.shape[1]
+            if is_verify:
+                target = rows[:, vpos : vpos + 1]
+                mask = valid
+                for d in ext:
+                    other = self._lookup(tv, tr, adj, rows[:, d])
+                    mask = mask & ops_mod.row_membership(other, target)[:, 0]
+                new_rows, m = ops_mod.compact(rows, mask, b)
+                out_w = b
+            else:
+                cands = self._lookup(tv, tr, adj, rows[:, ext[0]])
+                mask = (cands != INVALID) & valid[:, None]
+                for d in ext[1:]:
+                    other = self._lookup(tv, tr, adj, rows[:, d])
+                    mask = mask & ops_mod.row_membership(other, cands)
+                for col in range(k):
+                    mask = mask & (cands != rows[:, col : col + 1])
+                for pp in lt:
+                    mask = mask & (cands < jnp.where(valid, rows[:, pp], -1)[:, None])
+                for pp in gt:
+                    mask = mask & (cands > jnp.where(valid, rows[:, pp], INVALID)[:, None])
+                d_pad = cands.shape[1]
+                expanded = jnp.concatenate(
+                    [jnp.broadcast_to(rows[:, None, :], (b, d_pad, k)), cands[:, :, None]],
+                    axis=2,
+                ).reshape(b * d_pad, k + 1)
+                new_rows, m = ops_mod.compact(expanded, mask.reshape(-1), b * d_pad)
+                out_w = b * d_pad
+                k = k + 1
+            if rebalance and out_w >= p:
+                share = out_w // p
+                chunks = new_rows[: share * p].reshape(p, share, k)
+                cvalid = (jnp.arange(share * p) < m).reshape(p, share)
+                got = jax.lax.all_to_all(chunks, self.axis, split_axis=0, concat_axis=0, tiled=True)
+                gvalid = jax.lax.all_to_all(cvalid, self.axis, split_axis=0, concat_axis=0, tiled=True)
+                new_rows, m = ops_mod.compact(got.reshape(-1, k), gvalid.reshape(-1), out_w)
+            buf, n2 = ops_mod.queue_append(out_buf[0], out_n[0], new_rows, m)
+            return rem[None], buf[None], n2[None]
+
+        return self._shardmap(f, 5, 3)
+
+    # ------------------------------------------------------------------
+
+    def run(self, query: QueryGraph, space: str = "huge") -> Tuple[int, Dict]:
+        plan = optimal_plan(query, GraphStats.from_graph(self.graph), self.p, space)
+        flow = translate(plan)
+        chain = wco_chain(flow)
+        if chain is None:
+            raise ValueError(
+                "distributed engine runs extend/verify-chain plans; this plan "
+                "has a PUSH-JOIN barrier — use the single-process engine"
+            )
+        b = self.cfg.batch_size
+        cap = self.cfg.queue_capacity
+        bufs, ns = {}, {}
+        for i, op in enumerate(chain[:-1]):
+            width = len(op.schema)
+            slack = b if op.kind in ("scan", "verify") else b * self.d_pad
+            bufs[i] = jax.device_put(
+                jnp.full((self.p, cap + slack, width), INVALID, jnp.int32), self.sh(3)
+            )
+            ns[i] = jax.device_put(jnp.zeros((self.p,), jnp.int32), self.sh(1))
+        cursor = jax.device_put(jnp.zeros((self.p,), jnp.int32), self.sh(1))
+
+        scan_step = self._build_scan_step(chain[0])
+        steps = {
+            i: self._build_extend_step(op, op.kind == "verify")
+            for i, op in enumerate(chain)
+            if op.kind in ("extend", "verify")
+        }
+        total_count = 0
+        rounds = 0
+        scan_rounds = self.src.shape[1] // b
+        scans_done = 0
+        while True:
+            progressed = False
+            if scans_done < scan_rounds and cap - int(jnp.max(ns[0])) >= b:
+                bufs[0], ns[0] = scan_step(
+                    self.src, self.dst, self.scan_totals, cursor, bufs[0], ns[0]
+                )
+                cursor = cursor + b
+                scans_done += 1
+                rounds += 1
+                progressed = True
+            for i, op in enumerate(chain):
+                if i not in steps:
+                    continue
+                in_i = i - 1
+                if int(jnp.max(ns[in_i])) <= 0:
+                    continue
+                is_last = i == len(chain) - 2
+                slack = b if op.kind == "verify" else b * self.d_pad
+                if not is_last and cap - int(jnp.max(ns[i])) < slack:
+                    continue
+                ns[in_i], bufs[i], ns[i] = steps[i](
+                    self.adj, bufs[in_i], ns[in_i], bufs[i], ns[i]
+                )
+                rounds += 1
+                progressed = True
+                if is_last:
+                    total_count += int(jnp.sum(ns[i]))
+                    ns[i] = jax.device_put(jnp.zeros((self.p,), jnp.int32), self.sh(1))
+            if not progressed:
+                break
+        self.stats = {"rounds": rounds, "shards": self.p}
+        return total_count, self.stats

@@ -1,0 +1,559 @@
+"""The HUGE engine: dataflow execution with the adaptive scheduler (§4-§5).
+
+This is the single-process reference engine. It executes the full dataflow on
+one device while *simulating* the k-machine deployment for communication
+accounting exactly as the paper measures it:
+
+  * partial results live on the machine owning their first matched vertex
+    (SCAN emits edges from the owner's partition; PULL-EXTEND keeps results
+    local; PUSH-JOIN re-partitions by join key);
+  * a PULL-EXTEND's fetch stage dedups the batch's remote vertices per
+    machine (the paper's merged-RPC aggregation) and runs them through a
+    per-machine LRBU cache; cache misses are charged
+    ``(deg(v) + 2) * 4`` bytes of pull traffic;
+  * PUSH-JOIN charges the shuffle of both inputs; pushing-mode wco extends
+    (BiGJoin-style plans) charge ``|ext| · rows · K`` words.
+
+Counts are exact (validated against the networkx oracle); communication and
+memory are measured the way Table 1 reports C and M. The true multi-device
+engine with real collectives is distributed.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cache as lrbu
+from repro.core import operators as ops_mod
+from repro.core.cost import GraphStats
+from repro.core.dataflow import Dataflow, OpDesc, translate
+from repro.core.optimizer import optimal_plan
+from repro.core.plan import ExecutionPlan
+from repro.core.query import QueryGraph
+from repro.core.scheduler import AdaptiveScheduler, ScheduleStats
+from repro.graph.storage import Graph, INVALID
+
+
+# ---------------------------------------------------------------------------
+# Config / stats
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class EngineConfig:
+    batch_size: int = 256
+    queue_capacity: int = 1 << 17          # rows per operator output queue
+    join_buffer_capacity: int = 1 << 20    # rows buffered per PUSH-JOIN input
+    join_out_capacity: int = 1 << 18       # worst-case rows per join step
+    num_machines: int = 8                  # simulated cluster size (k)
+    cache_capacity: int = 1 << 14          # entries per machine (0 = disabled)
+    cache_ways: int = 4
+    cache_policy: str = "lrbu"             # "lrbu" | "lru" | "direct"
+    materialize: bool = False              # keep final matches (tests only)
+    materialize_cap: int = 1 << 20
+    use_intersect_kernel: bool = False     # Pallas path (interpret on CPU)
+
+
+@dataclasses.dataclass
+class EngineStats:
+    count: int = 0
+    pulled_bytes: int = 0
+    pushed_bytes: int = 0
+    cache_hits: int = 0
+    cache_misses: int = 0
+    batches: int = 0
+    rows_emitted: int = 0
+    compute_time: float = 0.0   # T_R analogue: intersect/join/scan
+    comm_time: float = 0.0      # T_C analogue: fetch stage (routing + cache)
+    peak_queue_rows: int = 0
+    peak_queue_bytes: int = 0
+    join_overflows: int = 0
+    wall_time: float = 0.0
+    per_machine_rows: Optional[np.ndarray] = None
+
+    @property
+    def total_comm_bytes(self) -> int:
+        return self.pulled_bytes + self.pushed_bytes
+
+    @property
+    def hit_rate(self) -> float:
+        tot = self.cache_hits + self.cache_misses
+        return self.cache_hits / tot if tot else 0.0
+
+
+@dataclasses.dataclass
+class EnumerationResult:
+    count: int
+    stats: EngineStats
+    schedule: ScheduleStats
+    matches: Optional[np.ndarray] = None  # [n, |V_q|] columns in query-vertex order
+
+
+# ---------------------------------------------------------------------------
+# Request routing (fetch stage, Alg. 4 lines 1-9)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("num_machines", "num_vertices", "r_cap"))
+def route_requests(vids, machs, valid, num_machines: int, num_vertices: int, r_cap: int):
+    """Dedup (machine, vid) request pairs into per-machine fixed-width lists."""
+    big = jnp.int32(num_machines * num_vertices)
+    key = jnp.where(valid, machs * num_vertices + vids, big)
+    order = jnp.argsort(key)
+    ks = jnp.take(key, order)
+    valid_s = ks < big
+    uniq = valid_s & jnp.concatenate([jnp.ones((1,), bool), ks[1:] != ks[:-1]])
+    m_s = jnp.where(valid_s, ks // num_vertices, num_machines)
+    v_s = jnp.where(valid_s, ks % num_vertices, INVALID)
+    cnt = jax.ops.segment_sum(uniq.astype(jnp.int32), m_s, num_segments=num_machines + 1)[
+        :num_machines
+    ]
+    offs = jnp.cumsum(cnt) - cnt
+    offs_ext = jnp.concatenate([offs, jnp.zeros((1,), jnp.int32)])
+    grank = jnp.cumsum(uniq.astype(jnp.int32)) - 1
+    slot = grank - jnp.take(offs_ext, jnp.minimum(m_s, num_machines))
+    tgt_m = jnp.where(uniq, m_s, num_machines)
+    tgt_s = jnp.where(uniq, slot, r_cap)
+    reqs = jnp.full((num_machines, r_cap), INVALID, jnp.int32).at[tgt_m, tgt_s].set(
+        v_s, mode="drop"
+    )
+    return reqs, cnt
+
+
+def _make_stacked_cache(num_machines: int, capacity: int, ways: int) -> lrbu.LRBUState:
+    sets = max(1, capacity // ways)
+    return lrbu.LRBUState(
+        keys=jnp.full((num_machines, sets, ways), INVALID, jnp.int32),
+        epoch=jnp.full((num_machines, sets, ways), -1, jnp.int32),
+        current_epoch=jnp.zeros((num_machines,), jnp.int32),
+    )
+
+
+_POLICIES = {
+    "lrbu": lrbu.fetch_update,
+    "lru": lrbu.fetch_update_lru,
+    "direct": lrbu.fetch_update_direct,
+}
+
+
+# ---------------------------------------------------------------------------
+# Device queues
+# ---------------------------------------------------------------------------
+
+class DeviceQueue:
+    def __init__(self, capacity: int, width: int):
+        self.buf = jnp.full((capacity, width), INVALID, jnp.int32)
+        self.n = 0  # host-side authoritative count
+        self.capacity = capacity
+        self.width = width
+
+    def append(self, rows: jax.Array, m) -> int:
+        m_host = int(m)
+        if self.n + m_host > self.capacity:
+            raise RuntimeError(
+                f"queue overflow: {self.n}+{m_host} > {self.capacity} "
+                "(scheduler slack invariant violated)"
+            )
+        self.buf, _ = ops_mod.queue_append(self.buf, jnp.int32(self.n), rows, m)
+        self.n += m_host
+        return m_host
+
+    def pop(self, batch: int) -> Tuple[jax.Array, jax.Array]:
+        rows, take, _ = ops_mod.queue_pop(self.buf, jnp.int32(self.n), batch)
+        self.n -= int(take)
+        return rows, take
+
+    def free(self) -> int:
+        return self.capacity - self.n
+
+    def bytes_used(self) -> int:
+        return self.n * self.width * 4
+
+
+# ---------------------------------------------------------------------------
+# Operator runtimes
+# ---------------------------------------------------------------------------
+
+class _BaseRT:
+    label = "op"
+
+    def __init__(self, engine: "HugeEngine", desc: OpDesc, out_q: Optional[DeviceQueue]):
+        self.e = engine
+        self.desc = desc
+        self.out_q = out_q
+        self.label = desc.label()
+
+    def output_free(self) -> int:
+        return self.out_q.free() if self.out_q is not None else 1 << 62
+
+    def required_slack(self) -> int:
+        return 0
+
+
+class _ScanRT(_BaseRT):
+    def __init__(self, engine, desc, out_q):
+        super().__init__(engine, desc, out_q)
+        self.cursor = 0
+        self.total = int(engine.graph.num_directed_edges)
+
+    def has_input(self) -> bool:
+        return self.cursor < self.total
+
+    def required_slack(self) -> int:
+        return self.e.cfg.batch_size
+
+    def run_one(self) -> None:
+        e = self.e
+        t0 = time.perf_counter()
+        rows, n = ops_mod.scan_batch(
+            e.src_pad, e.dst_pad, jnp.int32(self.cursor), jnp.int32(self.total),
+            e.cfg.batch_size, self.desc.lt_positions, self.desc.gt_positions,
+        )
+        self.cursor += e.cfg.batch_size
+        m = self.out_q.append(rows, n)
+        e.stats.compute_time += time.perf_counter() - t0
+        e.stats.batches += 1
+        e.stats.rows_emitted += m
+
+
+class _ExtendRT(_BaseRT):
+    def __init__(self, engine, desc, in_q, out_q, comm: str):
+        super().__init__(engine, desc, out_q)
+        self.in_q = in_q
+        self.comm = comm
+
+    def has_input(self) -> bool:
+        return self.in_q.n > 0
+
+    def required_slack(self) -> int:
+        return self.e.cfg.batch_size * self.e.d_pad
+
+    def run_one(self) -> None:
+        e = self.e
+        rows, n = self.in_q.pop(e.cfg.batch_size)
+        if self.comm == "pull":
+            e.fetch_stage(rows, n, self.desc.ext)
+        elif self.comm == "push":
+            e.push_wco_stage(rows, n, len(self.desc.ext), rows.shape[1])
+        t0 = time.perf_counter()
+        out, m = ops_mod.extend_batch(
+            e.adj, rows, n, self.desc.ext, self.desc.lt_positions,
+            self.desc.gt_positions, e.cfg.batch_size * e.d_pad,
+            use_kernel=e.cfg.use_intersect_kernel,
+        )
+        cnt = self.out_q.append(out, m)
+        e.stats.compute_time += time.perf_counter() - t0
+        e.stats.batches += 1
+        e.stats.rows_emitted += cnt
+
+
+class _VerifyRT(_BaseRT):
+    def __init__(self, engine, desc, in_q, out_q, comm: str):
+        super().__init__(engine, desc, out_q)
+        self.in_q = in_q
+        self.comm = comm
+
+    def has_input(self) -> bool:
+        return self.in_q.n > 0
+
+    def required_slack(self) -> int:
+        return self.e.cfg.batch_size
+
+    def run_one(self) -> None:
+        e = self.e
+        rows, n = self.in_q.pop(e.cfg.batch_size)
+        if self.comm == "pull":
+            e.fetch_stage(rows, n, self.desc.ext)
+        t0 = time.perf_counter()
+        out, m = ops_mod.verify_batch(
+            e.adj, rows, n, self.desc.ext, self.desc.verify_pos, e.cfg.batch_size
+        )
+        cnt = self.out_q.append(out, m)
+        e.stats.compute_time += time.perf_counter() - t0
+        e.stats.batches += 1
+        e.stats.rows_emitted += cnt
+
+
+class _JoinRT(_BaseRT):
+    """PUSH-JOIN: both inputs fully buffered (barrier, §5.4), then the right
+    buffer is streamed batch-wise against the left buffer."""
+
+    def __init__(self, engine, desc, left_q, right_q, out_q):
+        super().__init__(engine, desc, out_q)
+        self.left_q = left_q
+        self.right_q = right_q
+        self.shuffle_charged = False
+        self.right_batch = max(64, engine.cfg.batch_size)
+        self._prepared = None  # (sorted_keys, sorted_buf) once left side final
+
+    def has_input(self) -> bool:
+        return self.right_q.n > 0
+
+    def required_slack(self) -> int:
+        return self.e.cfg.join_out_capacity
+
+    def run_one(self) -> None:
+        e = self.e
+        if not self.shuffle_charged:
+            # Shuffle both sides once: (P-1)/P of rows cross the network.
+            frac = (e.cfg.num_machines - 1) / max(1, e.cfg.num_machines)
+            nbytes = (
+                self.left_q.n * self.left_q.width + self.right_q.n * self.right_q.width
+            ) * 4 * frac
+            e.stats.pushed_bytes += int(nbytes)
+            self.shuffle_charged = True
+        if self._prepared is None:
+            # The left branch is complete (barrier, §5.4): merge-sort it by key
+            # once — the paper's buffered external sort.
+            t0 = time.perf_counter()
+            self._prepared = ops_mod.join_prepare(
+                self.left_q.buf, jnp.int32(self.left_q.n), self.desc.key_left
+            )
+            e.stats.compute_time += time.perf_counter() - t0
+        rrows, rn = self.right_q.pop(self.right_batch)
+        t0 = time.perf_counter()
+        out, m, overflow = ops_mod.join_probe(
+            self._prepared[0], self._prepared[1], rrows, rn,
+            self.desc.key_right, self.desc.right_extra,
+            self.desc.cross_neq, self.desc.cross_lt, e.cfg.join_out_capacity,
+        )
+        if bool(overflow):
+            e.stats.join_overflows += 1
+            raise RuntimeError(
+                "PUSH-JOIN output overflow: raise join_out_capacity or lower "
+                "right_batch (results would be lost)"
+            )
+        cnt = self.out_q.append(out, m)
+        e.stats.compute_time += time.perf_counter() - t0
+        e.stats.batches += 1
+        e.stats.rows_emitted += cnt
+
+
+class _SinkRT(_BaseRT):
+    def __init__(self, engine, desc, in_q):
+        super().__init__(engine, desc, None)
+        self.in_q = in_q
+        self.rows_out: List[np.ndarray] = []
+        # Drain in large fixed-size chunks (one jit signature).
+        self.drain = min(in_q.capacity, max(engine.cfg.batch_size * engine.d_pad, 1 << 15))
+
+    def has_input(self) -> bool:
+        return self.in_q.n > 0
+
+    def run_one(self) -> None:
+        e = self.e
+        rows, n = self.in_q.pop(self.drain)
+        n_host = int(n)
+        e.stats.count += n_host
+        if e.cfg.materialize and sum(r.shape[0] for r in self.rows_out) < e.cfg.materialize_cap:
+            host = np.asarray(rows[:n_host] if n_host <= rows.shape[0] else rows)
+            self.rows_out.append(host[:n_host])
+        # Track per-machine result distribution for the load-balance experiment.
+        if e.track_balance and n_host:
+            host = np.asarray(rows)[:n_host]
+            owners = host[:, 0] % e.cfg.num_machines
+            np.add.at(e.balance_rows, owners, 1)
+        e.stats.batches += 1
+
+
+# ---------------------------------------------------------------------------
+# Engine
+# ---------------------------------------------------------------------------
+
+class HugeEngine:
+    def __init__(self, graph: Graph, cfg: EngineConfig | None = None, track_balance: bool = False):
+        self.graph = graph
+        self.cfg = cfg or EngineConfig()
+        self.adj = graph.padded.adj
+        self.deg = graph.padded.deg
+        self.d_pad = graph.padded.d_pad
+        assert graph.num_vertices * self.cfg.num_machines < 2**31, (
+            "machine-id × vertex-id key must fit int32"
+        )
+        # Scan source: directed edge arrays padded to a batch multiple.
+        offsets = np.asarray(graph.offsets)
+        deg_np = np.diff(offsets)
+        src = np.repeat(np.arange(graph.num_vertices, dtype=np.int32), deg_np)
+        dst = np.asarray(graph.nbrs, dtype=np.int32)
+        b = self.cfg.batch_size
+        pad = (-len(src)) % b + b
+        self.src_pad = jnp.asarray(np.concatenate([src, np.full(pad, 0, np.int32)]))
+        self.dst_pad = jnp.asarray(np.concatenate([dst, np.full(pad, INVALID, np.int32)]))
+        self.stats = EngineStats()
+        self.track_balance = track_balance
+        self.balance_rows = np.zeros(self.cfg.num_machines, dtype=np.int64)
+        self._cache = None
+        if self.cfg.cache_capacity > 0:
+            ways = 1 if self.cfg.cache_policy == "direct" else self.cfg.cache_ways
+            self._cache = _make_stacked_cache(
+                self.cfg.num_machines, self.cfg.cache_capacity, ways
+            )
+            self._cache_update = jax.vmap(_POLICIES[self.cfg.cache_policy])
+
+    # -- fetch stage (pull accounting) ---------------------------------------
+
+    def fetch_stage(self, rows: jax.Array, n: jax.Array, ext: Tuple[int, ...]) -> None:
+        t0 = time.perf_counter()
+        cfg = self.cfg
+        b, k = rows.shape
+        row_valid = jnp.arange(b) < n
+        shard = jnp.where(rows[:, 0] >= 0, rows[:, 0] % cfg.num_machines, 0)
+        vids = rows[:, list(ext)]                       # [B, E]
+        machs = jnp.broadcast_to(shard[:, None], vids.shape)
+        remote = (vids % cfg.num_machines) != machs
+        valid = (
+            row_valid[:, None] & (vids != INVALID) & (vids >= 0) & remote
+        )
+        vids_f = vids.reshape(-1)
+        machs_f = machs.reshape(-1)
+        valid_f = valid.reshape(-1)
+        reqs, cnt = route_requests(
+            vids_f, machs_f, valid_f, cfg.num_machines, self.graph.num_vertices,
+            r_cap=vids_f.shape[0],
+        )
+        req_valid = reqs != INVALID
+        if self._cache is not None:
+            self._cache, hit = self._cache_update(self._cache, reqs)
+            hit = hit & req_valid
+        else:
+            hit = jnp.zeros_like(req_valid)
+        miss = req_valid & ~hit
+        degs = jnp.where(
+            miss, jnp.take(self.deg, jnp.clip(reqs, 0, self.graph.num_vertices - 1)), 0
+        )
+        pulled = jnp.sum((degs + 2) * 4 * miss)
+        self.stats.pulled_bytes += int(pulled)
+        self.stats.cache_hits += int(jnp.sum(hit))
+        self.stats.cache_misses += int(jnp.sum(miss))
+        self.stats.comm_time += time.perf_counter() - t0
+
+    # -- push accounting for wco-push extends (BiGJoin-style plans) -----------
+
+    def push_wco_stage(self, rows: jax.Array, n: jax.Array, n_ext: int, k: int) -> None:
+        frac = (self.cfg.num_machines - 1) / max(1, self.cfg.num_machines)
+        self.stats.pushed_bytes += int(int(n) * k * 4 * n_ext * frac)
+
+    # -- memory probe ----------------------------------------------------------
+
+    def _memory_probe(self):
+        rows = sum(q.n for q in self._queues.values())
+        nbytes = sum(q.bytes_used() for q in self._queues.values())
+        return rows, nbytes
+
+    # -- execution --------------------------------------------------------------
+
+    def run(
+        self,
+        query_or_plan: QueryGraph | ExecutionPlan | Dataflow,
+        space: str = "huge",
+        stats: GraphStats | None = None,
+    ) -> EnumerationResult:
+        t_start = time.perf_counter()
+        if isinstance(query_or_plan, Dataflow):
+            flow = query_or_plan
+        else:
+            if isinstance(query_or_plan, QueryGraph):
+                gstats = stats or GraphStats.from_graph(self.graph)
+                plan = optimal_plan(query_or_plan, gstats, self.cfg.num_machines, space)
+            else:
+                plan = query_or_plan
+            flow = translate(plan)
+
+        ops = flow.ops
+        succ: Dict[int, int] = {}
+        for i, op in enumerate(ops):
+            for j in op.inputs:
+                succ[j] = i
+
+        # Queues: an op feeding a PUSH-JOIN buffers its side fully; every
+        # queue carries one worst-case batch of slack on top (the Lemma 5.2
+        # overflow allowance — also what lets a join feed another join).
+        self._queues: Dict[int, DeviceQueue] = {}
+        for i, op in enumerate(ops):
+            if op.kind == "sink":
+                continue
+            slack = {
+                "scan": self.cfg.batch_size,
+                "verify": self.cfg.batch_size,
+                "extend": self.cfg.batch_size * self.d_pad,
+                "join": self.cfg.join_out_capacity,
+            }[op.kind]
+            s = succ.get(i)
+            if s is not None and ops[s].kind == "join":
+                cap = self.cfg.join_buffer_capacity + slack
+            else:
+                cap = self.cfg.queue_capacity + slack
+            self._queues[i] = DeviceQueue(cap, len(op.schema))
+
+        runtimes: Dict[int, _BaseRT] = {}
+        for i, op in enumerate(ops):
+            q = self._queues.get(i)
+            if op.kind == "scan":
+                runtimes[i] = _ScanRT(self, op, q)
+            elif op.kind == "extend":
+                runtimes[i] = _ExtendRT(self, op, self._queues[op.inputs[0]], q, op.comm)
+            elif op.kind == "verify":
+                runtimes[i] = _VerifyRT(self, op, self._queues[op.inputs[0]], q, "pull")
+            elif op.kind == "join":
+                runtimes[i] = _JoinRT(
+                    self, op, self._queues[op.inputs[0]], self._queues[op.inputs[1]], q
+                )
+            else:
+                runtimes[i] = _SinkRT(self, op, self._queues[op.inputs[0]])
+
+        sched_stats = ScheduleStats()
+
+        def run_pipeline(end_idx: int):
+            chain_idx = []
+            i = end_idx
+            while True:
+                chain_idx.append(i)
+                op = ops[i]
+                if op.kind in ("scan", "join"):
+                    break
+                i = op.inputs[0]
+            chain_idx.reverse()
+            head = ops[chain_idx[0]]
+            if head.kind == "join":
+                run_pipeline(head.inputs[0])
+                run_pipeline(head.inputs[1])
+            sched = AdaptiveScheduler(
+                [runtimes[j] for j in chain_idx], memory_probe=self._memory_probe
+            )
+            st = sched.run()
+            for f in dataclasses.fields(ScheduleStats):
+                setattr(
+                    sched_stats, f.name,
+                    max(getattr(sched_stats, f.name), getattr(st, f.name))
+                    if f.name.startswith("peak")
+                    else getattr(sched_stats, f.name) + getattr(st, f.name),
+                )
+
+        run_pipeline(flow.sink_index)
+
+        self.stats.peak_queue_rows = sched_stats.peak_queue_rows
+        self.stats.peak_queue_bytes = sched_stats.peak_queue_bytes
+        self.stats.wall_time = time.perf_counter() - t_start
+        self.stats.per_machine_rows = self.balance_rows.copy()
+
+        sink_rt = runtimes[flow.sink_index]
+        matches = None
+        if self.cfg.materialize and isinstance(sink_rt, _SinkRT) and sink_rt.rows_out:
+            matches = np.concatenate(sink_rt.rows_out, axis=0)
+        return EnumerationResult(
+            count=self.stats.count, stats=self.stats, schedule=sched_stats, matches=matches
+        )
+
+
+def enumerate_query(
+    graph: Graph,
+    query: QueryGraph,
+    cfg: EngineConfig | None = None,
+    space: str = "huge",
+) -> EnumerationResult:
+    """One-call API: plan, translate, schedule, execute, count."""
+    return HugeEngine(graph, cfg).run(query, space=space)

@@ -1,0 +1,374 @@
+"""Vectorised JAX implementations of the primitive operators (paper §4.2-4.4).
+
+Batches of partial matches are dense int32 arrays ``rows[B, K]`` with a valid
+count ``n`` (rows ≥ n are ignored; INVALID-filled). Queues are fixed-capacity
+stacks ``(buf[CAP, K], n)`` — enumeration has set semantics so LIFO order is
+irrelevant, and stack pops are cheap dynamic slices.
+
+All functions are pure and jit-compiled with static shape arguments; the
+BFS/DFS-adaptive scheduler (scheduler.py) drives them batch-by-batch exactly
+as Algorithm 5 prescribes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.graph.storage import INVALID
+
+
+# ---------------------------------------------------------------------------
+# Small utilities
+# ---------------------------------------------------------------------------
+
+def row_membership(sorted_rows: jax.Array, queries: jax.Array) -> jax.Array:
+    """queries[b, j] ∈ sorted_rows[b, :] (rows sorted ascending, INVALID-padded)."""
+    idx = jax.vmap(jnp.searchsorted)(sorted_rows, queries)
+    idx = jnp.clip(idx, 0, sorted_rows.shape[-1] - 1)
+    found = jnp.take_along_axis(sorted_rows, idx, axis=-1)
+    return (found == queries) & (queries != INVALID)
+
+
+def compact(rows: jax.Array, mask: jax.Array, out_cap: int) -> Tuple[jax.Array, jax.Array]:
+    """Pack masked rows to the front of a fresh [out_cap, K] buffer."""
+    k = rows.shape[-1]
+    pos = jnp.cumsum(mask) - 1
+    n = jnp.sum(mask, dtype=jnp.int32)
+    tgt = jnp.where(mask, pos, out_cap)  # out-of-range → dropped by scatter
+    out = jnp.full((out_cap, k), INVALID, dtype=jnp.int32)
+    out = out.at[tgt].set(rows, mode="drop")
+    return out, n
+
+
+def lexsort_rows(cols: jax.Array) -> jax.Array:
+    """Stable lexicographic argsort by columns of ``cols[N, C]`` (col 0 primary)."""
+    n = cols.shape[0]
+    order = jnp.arange(n, dtype=jnp.int32)
+    for c in range(cols.shape[1] - 1, -1, -1):
+        vals = jnp.take(cols[:, c], order)
+        perm = jnp.argsort(vals, stable=True)
+        order = jnp.take(order, perm)
+    return order
+
+
+# ---------------------------------------------------------------------------
+# Queue (fixed-capacity stack)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def queue_append(buf: jax.Array, n: jax.Array, rows: jax.Array, m: jax.Array):
+    cap = buf.shape[0]
+    r = rows.shape[0]
+    idx = n + jnp.arange(r, dtype=jnp.int32)
+    tgt = jnp.where(jnp.arange(r) < m, idx, cap)
+    buf = buf.at[tgt].set(rows, mode="drop")
+    return buf, jnp.minimum(n + m, cap)
+
+
+@functools.partial(jax.jit, static_argnames=("batch",))
+def queue_pop(buf: jax.Array, n: jax.Array, batch: int):
+    take = jnp.minimum(n, batch).astype(jnp.int32)
+    start = jnp.maximum(n - take, 0)
+    rows = lax.dynamic_slice(buf, (start, jnp.int32(0)), (batch, buf.shape[1]))
+    return rows, take, n - take
+
+
+# ---------------------------------------------------------------------------
+# SCAN
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("batch", "lt", "gt"))
+def scan_batch(src: jax.Array, dst: jax.Array, cursor: jax.Array, total: jax.Array,
+               batch: int, lt: Tuple[int, ...], gt: Tuple[int, ...]):
+    """Emit one batch of directed-edge matches [batch, 2] starting at cursor.
+
+    ``src``/``dst`` must be padded to a multiple of ``batch`` (engine does
+    this) so the dynamic slice never clamps; ``total`` is the true edge count.
+    """
+    s = lax.dynamic_slice(src, (cursor,), (batch,))
+    d = lax.dynamic_slice(dst, (cursor,), (batch,))
+    valid = (cursor + jnp.arange(batch)) < total
+    rows = jnp.stack([s, d], axis=1)
+    mask = valid
+    for p in lt:  # col0 < col(p): only p=1 arises for scans
+        mask = mask & (rows[:, 0] < rows[:, p])
+    for p in gt:
+        mask = mask & (rows[:, 0] > rows[:, p])
+    rows = jnp.where(mask[:, None], rows, INVALID)
+    out, n = compact(rows, mask, batch)
+    return out, n
+
+
+# ---------------------------------------------------------------------------
+# PULL-EXTEND — intersect stage (Eq. 2). The fetch stage lives in cache.py /
+# distributed.py; on a single device all adjacency is local.
+# ---------------------------------------------------------------------------
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("ext", "lt", "gt", "out_cap", "use_kernel"),
+)
+def extend_batch(
+    adj: jax.Array,            # int32[V, D] padded sorted adjacency
+    rows: jax.Array,           # int32[B, K]
+    n: jax.Array,
+    ext: Tuple[int, ...],
+    lt: Tuple[int, ...],
+    gt: Tuple[int, ...],
+    out_cap: int,
+    use_kernel: bool = False,
+):
+    b, k = rows.shape
+    v = adj.shape[0]
+    valid_row = jnp.arange(b) < n
+
+    def nbr_rows(col):
+        vids = rows[:, col]
+        safe = jnp.clip(vids, 0, v - 1)
+        r = jnp.take(adj, safe, axis=0)
+        ok = (vids >= 0) & (vids < v)
+        return jnp.where(ok[:, None], r, INVALID)
+
+    cands = nbr_rows(ext[0])  # [B, D]
+    mask = (cands != INVALID) & valid_row[:, None]
+    if len(ext) > 1:
+        if use_kernel:
+            from repro.kernels.intersect import ops as ik
+
+            others = jnp.stack([nbr_rows(d) for d in ext[1:]], axis=1)  # [B, E-1, D]
+            mask = mask & ik.multiway_membership(cands, others)
+        else:
+            for d in ext[1:]:
+                mask = mask & row_membership(nbr_rows(d), cands)
+    # Isomorphism (injectivity) check — Alg. 4 line 19.
+    for col in range(k):
+        mask = mask & (cands != rows[:, col : col + 1])
+    # Symmetry-breaking partial orders.
+    for p in lt:
+        mask = mask & (cands < jnp.where(valid_row, rows[:, p], -1)[:, None])
+    for p in gt:
+        mask = mask & (cands > jnp.where(valid_row, rows[:, p], INVALID)[:, None])
+
+    d = cands.shape[1]
+    expanded = jnp.concatenate(
+        [
+            jnp.broadcast_to(rows[:, None, :], (b, d, k)),
+            cands[:, :, None],
+        ],
+        axis=2,
+    ).reshape(b * d, k + 1)
+    return compact(expanded, mask.reshape(b * d), out_cap)
+
+
+@functools.partial(jax.jit, static_argnames=("ext", "verify_pos", "out_cap"))
+def verify_batch(
+    adj: jax.Array,
+    rows: jax.Array,
+    n: jax.Array,
+    ext: Tuple[int, ...],
+    verify_pos: int,
+    out_cap: int,
+):
+    """Pulling-hash 'hint' (§5.2): keep rows whose f(root) ∈ ∩ N(f(ext))."""
+    b, k = rows.shape
+    v = adj.shape[0]
+    valid_row = jnp.arange(b) < n
+    target = rows[:, verify_pos : verify_pos + 1]  # [B, 1]
+    mask = valid_row
+    for d in ext:
+        vids = rows[:, d]
+        safe = jnp.clip(vids, 0, v - 1)
+        r = jnp.take(adj, safe, axis=0)
+        ok = (vids >= 0) & (vids < v)
+        r = jnp.where(ok[:, None], r, INVALID)
+        mask = mask & row_membership(r, target)[:, 0]
+    return compact(rows, mask, out_cap)
+
+
+# ---------------------------------------------------------------------------
+# PUSH-JOIN — buffered distributed hash join (§4.3). The left side is sorted
+# by key once (the paper's external merge sort of the buffered branch); right
+# batches then probe it with a vectorised lexicographic binary search and the
+# per-key cross products are emitted. This mirrors the paper's "read back the
+# data of each join key in a streaming manner" with O(log) probes.
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("key_cols",))
+def join_prepare(lbuf: jax.Array, ln: jax.Array, key_cols: Tuple[int, ...]):
+    """Sort the fully-buffered left side by its join key (invalid rows last)."""
+    nl = lbuf.shape[0]
+    valid = jnp.arange(nl) < ln
+    keys = jnp.where(valid[:, None], lbuf[:, list(key_cols)], INVALID)
+    order = lexsort_rows(keys)
+    return jnp.take(keys, order, axis=0), jnp.take(lbuf, order, axis=0)
+
+
+def _lex_cmp(lrows: jax.Array, r: jax.Array):
+    """Lexicographic comparison: returns (lt, eq) of lrows[i] vs r[i]."""
+    neq = lrows != r
+    first = jnp.argmax(neq, axis=-1)
+    any_neq = jnp.any(neq, axis=-1)
+    val_l = jnp.take_along_axis(lrows, first[..., None], axis=-1)[..., 0]
+    val_r = jnp.take_along_axis(r, first[..., None], axis=-1)[..., 0]
+    lt = any_neq & (val_l < val_r)
+    return lt, ~any_neq
+
+
+def _lex_bounds(sorted_keys: jax.Array, queries: jax.Array):
+    """Vectorised lower/upper bounds of each query key in the sorted key table."""
+    cap = sorted_keys.shape[0]
+    bq = queries.shape[0]
+    iters = max(1, cap.bit_length())
+
+    def search(upper: bool):
+        lo = jnp.zeros((bq,), jnp.int32)
+        hi = jnp.full((bq,), cap, jnp.int32)
+
+        def body(_, carry):
+            lo, hi = carry
+            mid = (lo + hi) // 2
+            lrows = jnp.take(sorted_keys, jnp.clip(mid, 0, cap - 1), axis=0)
+            lt, eq = _lex_cmp(lrows, queries)
+            go_right = (lt | eq) if upper else lt
+            lo = jnp.where(go_right, mid + 1, lo)
+            hi = jnp.where(go_right, hi, mid)
+            return lo, hi
+
+        lo, hi = lax.fori_loop(0, iters, body, (lo, hi))
+        return lo
+
+    return search(False), search(True)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("key_right", "right_extra", "cross_neq", "cross_lt", "out_cap"),
+)
+def join_probe(
+    sorted_keys: jax.Array,   # [CAP, kk] left keys, sorted, INVALID-padded
+    sorted_buf: jax.Array,    # [CAP, KL] left rows in the same order
+    rrows: jax.Array,         # [B, KR]
+    rn: jax.Array,
+    key_right: Tuple[int, ...],
+    right_extra: Tuple[int, ...],
+    cross_neq: Tuple[Tuple[int, int], ...],
+    cross_lt: Tuple[Tuple[int, int], ...],
+    out_cap: int,
+):
+    b, kr = rrows.shape
+    rvalid = jnp.arange(b) < rn
+    rkeys = jnp.where(rvalid[:, None], rrows[:, list(key_right)], INVALID - 1)
+    lo, hi = _lex_bounds(sorted_keys, rkeys)
+    cnt = jnp.where(rvalid, hi - lo, 0)
+    off = jnp.cumsum(cnt) - cnt
+    total = jnp.sum(cnt)
+
+    o = jnp.arange(out_cap, dtype=jnp.int32)
+    g = jnp.searchsorted(off + cnt, o, side="right").astype(jnp.int32)
+    g = jnp.clip(g, 0, b - 1)
+    li = o - jnp.take(off, g)
+    lpos = jnp.clip(jnp.take(lo, g) + li, 0, sorted_buf.shape[0] - 1)
+    valid = o < total
+
+    lrows_out = jnp.take(sorted_buf, lpos, axis=0)
+    rrows_out = jnp.take(rrows, g, axis=0)
+    out = (
+        jnp.concatenate([lrows_out, rrows_out[:, list(right_extra)]], axis=1)
+        if right_extra
+        else lrows_out
+    )
+    for a, bcol in cross_neq:
+        valid = valid & (out[:, a] != out[:, bcol])
+    for a, bcol in cross_lt:
+        valid = valid & (out[:, a] < out[:, bcol])
+    out = jnp.where(valid[:, None], out, INVALID)
+    out2, nout = compact(out, valid, out_cap)
+    return out2, nout, total > out_cap
+
+
+# ---------------------------------------------------------------------------
+# Legacy single-shot group join (kept for the distributed engine's shuffle path
+# and property tests).
+# ---------------------------------------------------------------------------
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("key_left", "key_right", "right_extra", "cross_neq", "cross_lt", "out_cap"),
+)
+def join_batch(
+    lbuf: jax.Array,  # [NL, KL]
+    ln: jax.Array,
+    rbuf: jax.Array,  # [NR, KR]
+    rn: jax.Array,
+    key_left: Tuple[int, ...],
+    key_right: Tuple[int, ...],
+    right_extra: Tuple[int, ...],
+    cross_neq: Tuple[Tuple[int, int], ...],
+    cross_lt: Tuple[Tuple[int, int], ...],
+    out_cap: int,
+):
+    nl, kl = lbuf.shape
+    nr, kr = rbuf.shape
+    nn = nl + nr
+    kk = len(key_left)
+
+    lvalid = jnp.arange(nl) < ln
+    rvalid = jnp.arange(nr) < rn
+    lkeys = jnp.where(lvalid[:, None], lbuf[:, list(key_left)], INVALID)
+    rkeys = jnp.where(rvalid[:, None], rbuf[:, list(key_right)], INVALID)
+
+    keys = jnp.concatenate([lkeys, rkeys], axis=0)                     # [N, kk]
+    side = jnp.concatenate(
+        [jnp.zeros(nl, jnp.int32), jnp.ones(nr, jnp.int32)], axis=0
+    )
+    orig = jnp.concatenate(
+        [jnp.arange(nl, dtype=jnp.int32), jnp.arange(nr, dtype=jnp.int32)], axis=0
+    )
+
+    order = lexsort_rows(jnp.concatenate([keys, side[:, None]], axis=1))
+    sk = jnp.take(keys, order, axis=0)
+    ss = jnp.take(side, order)
+    so = jnp.take(orig, order)
+
+    newgrp = jnp.concatenate(
+        [jnp.ones((1,), bool), jnp.any(sk[1:] != sk[:-1], axis=1)], axis=0
+    )
+    gid = jnp.cumsum(newgrp.astype(jnp.int32)) - 1                     # [N]
+    gstart = jax.ops.segment_min(jnp.arange(nn, dtype=jnp.int32), gid, num_segments=nn)
+    lcnt = jax.ops.segment_sum((ss == 0).astype(jnp.int32), gid, num_segments=nn)
+    rcnt = jax.ops.segment_sum((ss == 1).astype(jnp.int32), gid, num_segments=nn)
+    # Groups keyed by INVALID (out-of-count rows) contribute nothing.
+    gkey0 = jnp.full((nn,), INVALID, dtype=jnp.int32).at[gid].min(sk[:, 0])
+    pairs = jnp.where(gkey0 == INVALID, 0, lcnt * rcnt)
+    out_off = jnp.cumsum(pairs) - pairs                                # exclusive
+    total = jnp.sum(pairs)
+
+    o = jnp.arange(out_cap, dtype=jnp.int32)
+    g = jnp.searchsorted(out_off + pairs, o, side="right").astype(jnp.int32)
+    g = jnp.clip(g, 0, nn - 1)
+    local = o - jnp.take(out_off, g)
+    rc = jnp.maximum(jnp.take(rcnt, g), 1)
+    li = local // rc
+    ri = local % rc
+    gs = jnp.take(gstart, g)
+    lpos = jnp.clip(gs + li, 0, nn - 1)
+    rpos = jnp.clip(gs + jnp.take(lcnt, g) + ri, 0, nn - 1)
+    lorig = jnp.take(so, lpos)
+    rorig = jnp.take(so, rpos)
+    valid = o < total
+
+    lrows = jnp.take(lbuf, jnp.clip(lorig, 0, nl - 1), axis=0)
+    rrows = jnp.take(rbuf, jnp.clip(rorig, 0, nr - 1), axis=0)
+    out = jnp.concatenate([lrows, rrows[:, list(right_extra)]], axis=1) if right_extra else lrows
+    for a, bcol in cross_neq:
+        valid = valid & (out[:, a] != out[:, bcol])
+    for a, bcol in cross_lt:
+        valid = valid & (out[:, a] < out[:, bcol])
+    out = jnp.where(valid[:, None], out, INVALID)
+    out2, nout = compact(out, valid, out_cap)
+    overflow = total > out_cap
+    return out2, nout, overflow

@@ -1,0 +1,102 @@
+"""BFS/DFS-adaptive scheduler — paper Algorithm 5 (§5.2).
+
+Each operator owns a fixed-capacity output queue. The scheduler lets the
+current operator consume as many input batches as possible (BFS-style, max
+parallelism) but *yields* it the moment its output queue cannot absorb another
+batch's worst-case results, scheduling the successor instead; when an operator
+drains its input the scheduler backtracks to the precursor. Queue capacities
+are preallocated device arrays, so the paper's O(|V_q|²·D_G) bound becomes a
+structural compile-time constant.
+
+The scheduler works over an abstract runtime interface so the same loop
+drives SCAN / PULL-EXTEND / VERIFY / PUSH-JOIN chains (engine.py) and the
+distributed shard_map engine (distributed.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Protocol
+
+
+class OperatorRuntime(Protocol):
+    label: str
+
+    def has_input(self) -> bool: ...
+    def output_free(self) -> int: ...
+    def required_slack(self) -> int: ...
+    def run_one(self) -> None: ...
+
+
+@dataclasses.dataclass
+class ScheduleStats:
+    steps: int = 0
+    yields_full: int = 0
+    yields_empty: int = 0
+    backtracks: int = 0
+    peak_queue_rows: int = 0
+    peak_queue_bytes: int = 0
+
+
+class AdaptiveScheduler:
+    """Algorithm 5 over a linear operator chain.
+
+    The paper's literal pseudocode bounces precursor↔successor when the head
+    of the chain is exhausted; we resolve direction by whether *any* upstream
+    operator still has input (identical schedule on live inputs, guaranteed
+    termination on drained ones).
+    """
+
+    def __init__(self, chain: List[OperatorRuntime], memory_probe=None):
+        self.chain = chain
+        self.memory_probe = memory_probe  # () -> (rows, bytes)
+        self.stats = ScheduleStats()
+
+    def _probe(self):
+        if self.memory_probe is not None:
+            rows, nbytes = self.memory_probe()
+            self.stats.peak_queue_rows = max(self.stats.peak_queue_rows, rows)
+            self.stats.peak_queue_bytes = max(self.stats.peak_queue_bytes, nbytes)
+
+    def run(self) -> ScheduleStats:
+        chain = self.chain
+        last = len(chain) - 1
+        cur = 0
+        stall = 0  # iterations since the last batch ran (deadlock guard)
+        while True:
+            if stall > 4 * len(chain) + 8:
+                raise RuntimeError(
+                    "scheduler stalled: every operator is blocked on a full "
+                    "output queue — raise queue/join-buffer capacity "
+                    f"(chain: {[op.label for op in chain]})"
+                )
+            op = chain[cur]
+            if op.has_input():
+                # Schedule(O): consume until the output queue can no longer
+                # absorb a worst-case batch, or the input drains.
+                ran = False
+                while op.has_input() and op.output_free() >= op.required_slack():
+                    op.run_one()
+                    ran = True
+                    self.stats.steps += 1
+                    self._probe()
+                stall = 0 if ran else stall + 1
+                if op.has_input():
+                    self.stats.yields_full += 1  # yielded on full queue
+                else:
+                    self.stats.yields_empty += 1
+                if cur == last:
+                    self.stats.backtracks += 1
+                    cur = max(cur - 1, 0)
+                else:
+                    cur += 1
+                continue
+            # O has no input: backtrack if upstream work exists, else advance.
+            stall += 1
+            if any(chain[j].has_input() for j in range(cur)):
+                self.stats.backtracks += 1
+                cur -= 1
+            elif any(chain[j].has_input() for j in range(cur + 1, len(chain))):
+                cur += 1
+            else:
+                break  # every operator drained → chain complete
+        return self.stats

@@ -1,0 +1,36 @@
+"""Graph substrate: device-resident CSR storage, partitioning, generators.
+
+The data graph is stored in padded CSR form (sorted adjacency, sentinel
+padding) so that every operator in the HUGE engine is a dense, vectorisable
+JAX computation. Partitioning follows the paper's random (hash) vertex
+partitioning (Section 2 of the paper): vertex ``v`` lives on shard
+``v % num_shards`` together with its full adjacency list.
+"""
+from repro.graph.storage import (
+    INVALID,
+    Graph,
+    PaddedAdjacency,
+    build_graph,
+    from_edge_list,
+)
+from repro.graph.partition import PartitionedGraph, partition_graph
+from repro.graph.generators import (
+    erdos_renyi,
+    powerlaw_graph,
+    ring_of_cliques,
+    grid_graph,
+)
+
+__all__ = [
+    "INVALID",
+    "Graph",
+    "PaddedAdjacency",
+    "build_graph",
+    "from_edge_list",
+    "PartitionedGraph",
+    "partition_graph",
+    "erdos_renyi",
+    "powerlaw_graph",
+    "ring_of_cliques",
+    "grid_graph",
+]

@@ -1,0 +1,188 @@
+"""Padded CSR graph storage.
+
+Design notes (TPU adaptation)
+-----------------------------
+HUGE keeps each partition's adjacency in CSR and serves ``GetNbrs`` RPCs from
+it. On TPU every access must be a dense gather, so alongside the classic CSR
+pair ``(offsets, nbrs)`` we materialise a *padded adjacency matrix*
+``adj[V, D_pad]`` whose rows are the sorted neighbour lists padded with the
+sentinel ``INVALID`` (int32 max). Sorted rows + a monotone sentinel mean that
+
+* set intersection (Eq. 2 of the paper) is a vectorised ``searchsorted``;
+* padding never produces false positives (INVALID matches nothing);
+* symmetry-breaking order filters are plain integer comparisons.
+
+``D_pad`` is the max degree rounded up to a lane multiple (128) so Pallas
+kernels can tile rows directly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Sentinel for padded adjacency entries. Larger than any vertex id, so padded
+# rows remain sorted and `searchsorted` membership tests are safe.
+INVALID = np.int32(np.iinfo(np.int32).max)
+
+_LANE = 128
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class PaddedAdjacency:
+    """Dense, padded adjacency: ``adj[v]`` = sorted neighbours of v, INVALID-padded."""
+
+    adj: jax.Array  # int32[V, D_pad]
+    deg: jax.Array  # int32[V]
+
+    @property
+    def num_vertices(self) -> int:
+        return self.adj.shape[0]
+
+    @property
+    def d_pad(self) -> int:
+        return self.adj.shape[1]
+
+    def neighbors(self, vids: jax.Array) -> Tuple[jax.Array, jax.Array]:
+        """Gather padded neighbour rows for ``vids`` (INVALID rows for invalid ids)."""
+        safe = jnp.clip(vids, 0, self.num_vertices - 1)
+        rows = jnp.take(self.adj, safe, axis=0)
+        degs = jnp.take(self.deg, safe, axis=0)
+        ok = (vids >= 0) & (vids < self.num_vertices)
+        rows = jnp.where(ok[..., None], rows, INVALID)
+        degs = jnp.where(ok, degs, 0)
+        return rows, degs
+
+    def tree_flatten(self):
+        return (self.adj, self.deg), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class Graph:
+    """An undirected data graph in CSR + padded form (device resident)."""
+
+    offsets: jax.Array  # int32[V+1]
+    nbrs: jax.Array  # int32[2E] sorted within each row
+    padded: PaddedAdjacency
+
+    @property
+    def num_vertices(self) -> int:
+        return self.offsets.shape[0] - 1
+
+    @property
+    def num_directed_edges(self) -> int:
+        return self.nbrs.shape[0]
+
+    @property
+    def num_edges(self) -> int:
+        return self.nbrs.shape[0] // 2
+
+    @property
+    def max_degree(self) -> int:
+        return int(np.asarray(jnp.max(self.padded.deg)))
+
+    @property
+    def avg_degree(self) -> float:
+        return float(self.num_directed_edges) / max(1, self.num_vertices)
+
+    def degree(self, vids: jax.Array) -> jax.Array:
+        return jnp.take(self.padded.deg, jnp.clip(vids, 0, self.num_vertices - 1))
+
+    def neighbors(self, vids: jax.Array) -> Tuple[jax.Array, jax.Array]:
+        return self.padded.neighbors(vids)
+
+    def has_edge(self, u: jax.Array, v: jax.Array) -> jax.Array:
+        """Vectorised edge test via searchsorted on sorted padded rows."""
+        rows, _ = self.padded.neighbors(u)
+        idx = jax.vmap(jnp.searchsorted)(rows, v)
+        idx = jnp.clip(idx, 0, rows.shape[-1] - 1)
+        return jnp.take_along_axis(rows, idx[..., None], axis=-1)[..., 0] == v
+
+    def size_bytes(self) -> int:
+        return int(
+            self.offsets.size * 4 + self.nbrs.size * 4 + self.padded.adj.size * 4 + self.padded.deg.size * 4
+        )
+
+    def tree_flatten(self):
+        return (self.offsets, self.nbrs, self.padded), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def build_graph(edges: np.ndarray, num_vertices: int, d_pad: int | None = None) -> Graph:
+    """Build a :class:`Graph` from an undirected edge array ``int[E, 2]``.
+
+    Self loops and duplicate edges are removed; adjacency is symmetrised and
+    sorted. ``d_pad`` defaults to max degree rounded up to 128 lanes.
+    """
+    edges = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
+    # Drop self loops, canonicalise, dedup.
+    edges = edges[edges[:, 0] != edges[:, 1]]
+    lo = np.minimum(edges[:, 0], edges[:, 1])
+    hi = np.maximum(edges[:, 0], edges[:, 1])
+    und = np.unique(np.stack([lo, hi], axis=1), axis=0)
+    # Symmetrise.
+    both = np.concatenate([und, und[:, ::-1]], axis=0)
+    order = np.lexsort((both[:, 1], both[:, 0]))
+    both = both[order]
+    src, dst = both[:, 0], both[:, 1]
+
+    deg = np.bincount(src, minlength=num_vertices).astype(np.int32)
+    offsets = np.zeros(num_vertices + 1, dtype=np.int32)
+    np.cumsum(deg, out=offsets[1:])
+    nbrs = dst.astype(np.int32)
+
+    max_deg = int(deg.max()) if deg.size else 0
+    if d_pad is None:
+        d_pad = max(_LANE, _round_up(max(1, max_deg), _LANE))
+    if max_deg > d_pad:
+        raise ValueError(f"d_pad={d_pad} smaller than max degree {max_deg}")
+
+    adj = np.full((num_vertices, d_pad), INVALID, dtype=np.int32)
+    # Row-fill padded adjacency (vectorised scatter).
+    row_idx = src
+    col_idx = (np.arange(both.shape[0]) - offsets[:-1].astype(np.int64)[src]).astype(np.int64)
+    adj[row_idx, col_idx] = nbrs
+
+    return Graph(
+        offsets=jnp.asarray(offsets),
+        nbrs=jnp.asarray(nbrs),
+        padded=PaddedAdjacency(adj=jnp.asarray(adj), deg=jnp.asarray(deg)),
+    )
+
+
+def from_edge_list(edge_list: Iterable[Sequence[int]], num_vertices: int | None = None) -> Graph:
+    edges = np.asarray(list(edge_list), dtype=np.int64).reshape(-1, 2)
+    if num_vertices is None:
+        num_vertices = int(edges.max()) + 1 if edges.size else 0
+    return build_graph(edges, num_vertices)
+
+
+def to_networkx(graph: Graph):
+    """Convert to networkx (host-side) for oracle validation."""
+    import networkx as nx
+
+    g = nx.Graph()
+    g.add_nodes_from(range(graph.num_vertices))
+    offsets = np.asarray(graph.offsets)
+    nbrs = np.asarray(graph.nbrs)
+    for v in range(graph.num_vertices):
+        for u in nbrs[offsets[v] : offsets[v + 1]]:
+            if v < u:
+                g.add_edge(v, int(u))
+    return g

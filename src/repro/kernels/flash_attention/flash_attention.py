@@ -1,0 +1,127 @@
+"""Pallas TPU kernel: blockwise online-softmax (flash) causal attention.
+
+The prefill/train hot spot of every assigned LM cell. Q is tiled over the
+grid; KV blocks stream through the innermost grid axis with running
+(max, sum, acc) scratch carried across iterations — the canonical TPU
+flash-attention schedule. Causality is enforced at block granularity (blocks
+entirely above the diagonal are skipped via masking; the diagonal block is
+element-masked).
+
+Layout (one head per grid row — callers flatten (batch, heads)):
+  q   f32/bf16 [BH, Sq, Dh]
+  k,v f32/bf16 [BH, Sk, Dh]
+  out f32      [BH, Sq, Dh]
+
+BlockSpecs: q tile (1, TQ, Dh), kv tiles (1, TK, Dh); scratch in VMEM:
+acc (TQ, Dh) f32, m/l (TQ, 128) f32. With TQ=TK=512, Dh=128 the VMEM
+working set is ≈ 0.8 MiB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_TQ = 256
+DEFAULT_TK = 256
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            scale: float, tq: int, tk: int, causal: bool, kv_steps: int,
+            softcap: float | None, offset: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32)                      # [TQ, Dh]
+    k = k_ref[0].astype(jnp.float32)                      # [TK, Dh]
+    v = v_ref[0].astype(jnp.float32)                      # [TK, Dh]
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale                                             # [TQ, TK]
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+
+    mask = None
+    if causal:
+        # offset = Sk - Sq aligns the diagonal when the query is a suffix of
+        # the key sequence (decode with a prefix KV cache).
+        q_pos = qi * tq + offset + jax.lax.broadcasted_iota(jnp.int32, (tq, tk), 0)
+        k_pos = ki * tk + jax.lax.broadcasted_iota(jnp.int32, (tq, tk), 1)
+        mask = q_pos >= k_pos
+        s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[:, :1]                                 # [TQ, 1]
+    m_cur = jnp.max(s, axis=1, keepdims=True)             # [TQ, 1]
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)                                # [TQ, TK]
+    if mask is not None:
+        # A fully-masked block with m still at NEG_INF would give p = 1.
+        p = jnp.where(mask, p, 0.0)
+    alpha = jnp.exp(m_prev - m_new)                       # [TQ, 1]
+    l_new = alpha * l_ref[:, :1] + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+    l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(ki == kv_steps - 1)
+    def _finish():
+        l = l_ref[:, :1]
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "tq", "tk", "interpret", "softcap"),
+)
+def flash_attention_kernel(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    softcap: float | None = None,
+    tq: int = DEFAULT_TQ,
+    tk: int = DEFAULT_TK,
+    interpret: bool = False,
+) -> jax.Array:
+    bh, sq, dh = q.shape
+    _, sk, _ = k.shape
+    tq = min(tq, sq)
+    tk = min(tk, sk)
+    assert sq % tq == 0 and sk % tk == 0, (sq, tq, sk, tk)
+    kv_steps = sk // tk
+    scale = 1.0 / (dh ** 0.5)
+    grid = (bh, sq // tq, kv_steps)
+    return pl.pallas_call(
+        functools.partial(
+            _kernel, scale=scale, tq=tq, tk=tk, causal=causal,
+            kv_steps=kv_steps, softcap=softcap, offset=sk - sq,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, tq, dh), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, tk, dh), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, tk, dh), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, tq, dh), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((tq, dh), jnp.float32),   # acc
+            pltpu.VMEM((tq, 128), jnp.float32),  # running max (lane-padded)
+            pltpu.VMEM((tq, 128), jnp.float32),  # running sum
+        ],
+        interpret=interpret,
+    )(q, k, v)

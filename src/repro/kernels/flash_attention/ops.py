@@ -1,0 +1,79 @@
+"""Public attention entry point: Pallas kernel on TPU, chunked-scan jnp
+implementation elsewhere (identical O(S·TK) memory, compilable for the
+dry-run), oracle for tests.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_kernel
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "softcap", "chunk"))
+def attention_chunked(
+    q: jax.Array,  # [BH, Sq, Dh]
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    softcap: float | None = None,
+    chunk: int = 512,
+) -> jax.Array:
+    """Online-softmax attention with a lax.scan over KV chunks — the same
+    algorithm as the Pallas kernel expressed in portable jnp. Peak memory is
+    O(Sq·chunk) instead of O(Sq·Sk); this is what the dry-run lowers."""
+    bh, sq, dh = q.shape
+    sk = k.shape[1]
+    chunk = min(chunk, sk)
+    if sk % chunk:  # pad KV to a chunk multiple (masked out)
+        pad = chunk - sk % chunk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0)))
+    n_chunks = k.shape[1] // chunk
+    qf = q.astype(jnp.float32) / (dh ** 0.5)
+    kc = k.reshape(bh, n_chunks, chunk, dh).transpose(1, 0, 2, 3)
+    vc = v.reshape(bh, n_chunks, chunk, dh).transpose(1, 0, 2, 3)
+
+    q_pos = jnp.arange(sq)
+
+    def step(carry, xs):
+        acc, m, l = carry
+        ci, kb, vb = xs
+        s = jnp.einsum("bqd,bkd->bqk", qf, kb.astype(jnp.float32))
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        k_pos = ci * chunk + jnp.arange(chunk)
+        mask = k_pos[None, :] < sk  # padding
+        if causal:
+            mask = mask & (q_pos[:, None] + (sk - sq) >= k_pos[None, :])
+        s = jnp.where(mask[None], s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.where(mask[None], jnp.exp(s - m_new), 0.0)
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc = acc * alpha + jnp.einsum("bqk,bkd->bqd", p, vb.astype(jnp.float32))
+        return (acc, m_new, l), None
+
+    init = (
+        jnp.zeros((bh, sq, dh), jnp.float32),
+        jnp.full((bh, sq, 1), -1e30, jnp.float32),
+        jnp.zeros((bh, sq, 1), jnp.float32),
+    )
+    (acc, m, l), _ = jax.lax.scan(step, init, (jnp.arange(n_chunks), kc, vc))
+    return (acc / jnp.maximum(l, 1e-30)).astype(q.dtype)
+
+
+def attention(
+    q: jax.Array, k: jax.Array, v: jax.Array, *,
+    causal: bool = True, softcap: float | None = None,
+    force_kernel: bool = False, chunk: int = 512,
+) -> jax.Array:
+    if jax.default_backend() == "tpu":
+        return flash_attention_kernel(q, k, v, causal=causal, softcap=softcap)
+    if force_kernel:
+        return flash_attention_kernel(q, k, v, causal=causal, softcap=softcap, interpret=True)
+    return attention_chunked(q, k, v, causal=causal, softcap=softcap, chunk=chunk)

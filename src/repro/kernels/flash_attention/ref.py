@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for flash attention: materialised-scores softmax attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jax.Array,  # [BH, Sq, Dh]
+    k: jax.Array,  # [BH, Sk, Dh]
+    v: jax.Array,  # [BH, Sk, Dh]
+    *,
+    causal: bool = True,
+    softcap: float | None = None,
+) -> jax.Array:
+    dh = q.shape[-1]
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s / (dh ** 0.5)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    if causal:
+        sq, sk = s.shape[-2:]
+        mask = jnp.tril(jnp.ones((sq, sk), bool), k=sk - sq)
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,26 @@
+"""Jitted public wrapper for the intersect kernel with CPU fallback.
+
+The Pallas TPU kernel only lowers on TPU backends; everywhere else (this CI
+box) we execute either the pure-jnp oracle (fast XLA path) or the kernel in
+``interpret=True`` mode (tests do the latter to validate kernel semantics).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.intersect.intersect import multiway_membership_kernel, TILE_B
+from repro.kernels.intersect.ref import multiway_membership_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def multiway_membership(cands: jax.Array, others: jax.Array, *, force_kernel: bool = False) -> jax.Array:
+    """Batched Eq.-2 membership: cands[B, D] ∈ ∩ others[B, E, D]."""
+    b = cands.shape[0]
+    if (_on_tpu() and b % TILE_B == 0):
+        return multiway_membership_kernel(cands, others)
+    if force_kernel:
+        return multiway_membership_kernel(cands, others, interpret=True)
+    return multiway_membership_ref(cands, others)

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the intersect kernel (binary-search membership)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.graph.storage import INVALID
+
+
+def multiway_membership_ref(cands: jax.Array, others: jax.Array) -> jax.Array:
+    """cands[B, D] present in every others[B, e, :]. ``others`` rows must be
+    sorted ascending (INVALID-padded) — the engine's adjacency invariant."""
+    b, d = cands.shape
+    _, e, _ = others.shape
+    acc = cands != INVALID
+    for i in range(e):
+        row = others[:, i, :]
+        idx = jax.vmap(jnp.searchsorted)(row, cands)
+        idx = jnp.clip(idx, 0, d - 1)
+        found = jnp.take_along_axis(row, idx, axis=-1)
+        acc = acc & (found == cands)
+    return acc

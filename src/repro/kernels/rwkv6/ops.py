@@ -1,0 +1,94 @@
+"""Public RWKV6 entry: Pallas kernel on TPU, chunked jnp scan elsewhere, plus
+the O(1)-state single-step used by the decode path."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rwkv6.ref import rwkv6_ref
+from repro.kernels.rwkv6.rwkv6 import rwkv6_kernel, DEFAULT_CHUNK
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "return_state", "stable_factored"))
+def rwkv6_chunked(r, k, v, w, u, *, chunk: int = 32, return_state: bool = False,
+                  stable_factored: bool = True):
+    """Chunked scan in portable jnp, vectorised over BH, scanned over chunks.
+
+    stable_factored=True (default, and what the dry-run lowers): the intra-
+    chunk pair interaction is a **normalised factored matmul**,
+
+        A[t,j] = (r_t ⊙ e^{c_{t-1} − z}) · (k_j ⊙ e^{z − c_j}),   z = c_C / 2,
+
+    which is exact for any per-channel normaliser z and turns the O(C²K)
+    pairwise tensor (≈1 PB/step of HBM traffic at the train_4k cell — see
+    EXPERIMENTS.md §Perf iteration 1) into two O(CK) operands and one MXU
+    matmul. fp32 range bounds the usable per-step log-decay at |log w| ≤ ~3.3
+    with C=32 (|c|/2 ≤ 53 < log(f32max)=88) — the model clamps accordingly
+    (ssm.rwkv6_block). stable_factored=False keeps the exact-for-any-decay
+    pairwise path (tests compare both against the sequential oracle).
+    """
+    bh, t, kd = r.shape
+    vd = v.shape[-1]
+    chunk = min(chunk, t)
+    assert t % chunk == 0, (t, chunk)
+    n = t // chunk
+    f32 = jnp.float32
+    # (A bf16-xs variant was tried and REFUTED in §Perf rwkv6 iteration 2 —
+    # the xs streams are not the dominant traffic — so everything stays f32.)
+
+    def resh(x, d):
+        return x.astype(f32).reshape(bh, n, chunk, d).transpose(1, 0, 2, 3)
+
+    rc, kc, wc = resh(r, kd), resh(k, kd), resh(w, kd)
+    vc = resh(v, vd)
+    uf = u.astype(f32)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+
+    def step(S, xs):
+        rb, kb, vb, wb = xs                                # [BH, C, ·]
+        logw = jnp.log(jnp.maximum(wb, 1e-12))
+        cum = jnp.cumsum(logw, axis=1)
+        cum_prev = cum - logw
+        if stable_factored:
+            z = cum[:, -1:, :] * 0.5                       # per-channel centre
+            r_z = rb * jnp.exp(cum_prev - z)               # [BH, C, K]
+            k_z = kb * jnp.exp(z - cum)
+            a = jnp.einsum("bti,bji->btj", r_z, k_z)       # MXU matmul
+            a = jnp.where(tri[None], a, 0.0)
+        else:
+            diff = cum_prev[:, :, None, :] - cum[:, None, :, :]  # [BH, C, C, K]
+            decay = jnp.where(tri[None, :, :, None], jnp.exp(diff), 0.0)
+            a = jnp.einsum("bti,bji,btji->btj", rb, kb, decay)
+        a = a + jnp.einsum("bti,bi,bti->bt", rb, uf, kb)[..., None] * jnp.eye(chunk)[None]
+        out = jnp.einsum("bti,biv->btv", rb * jnp.exp(cum_prev), S) + jnp.einsum(
+            "btj,bjv->btv", a, vb
+        )
+        k_dec = kb * jnp.exp(cum[:, -1:, :] - cum)
+        S = jnp.exp(cum[:, -1])[:, :, None] * S + jnp.einsum("bji,bjv->biv", k_dec, vb)
+        return S, out
+
+    S0 = jnp.zeros((bh, kd, vd), f32)
+    s_fin, out = jax.lax.scan(step, S0, (rc, kc, vc, wc))
+    out = out.transpose(1, 0, 2, 3).reshape(bh, t, vd)
+    return (out, s_fin) if return_state else out
+
+
+@jax.jit
+def rwkv6_decode_step(S, r, k, v, w, u):
+    """One token with carried state S[BH, K, V] → (S', out[BH, V])."""
+    f32 = jnp.float32
+    r, k, v, w, u = (x.astype(f32) for x in (r, k, v, w, u))
+    kv = k[:, :, None] * v[:, None, :]
+    out = jnp.einsum("bi,biv->bv", r, S + u[:, :, None] * kv)
+    S = w[:, :, None] * S + kv
+    return S, out
+
+
+def rwkv6(r, k, v, w, u, *, force_kernel: bool = False, chunk: int = 64):
+    if jax.default_backend() == "tpu":
+        return rwkv6_kernel(r, k, v, w, u, chunk=DEFAULT_CHUNK)
+    if force_kernel:
+        return rwkv6_kernel(r, k, v, w, u, chunk=min(DEFAULT_CHUNK, r.shape[1]), interpret=True)
+    return rwkv6_chunked(r, k, v, w, u, chunk=chunk)

@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for RWKV6 (Finch) — sequential state recurrence.
+
+Per head with key dim K, value dim V, at each step t:
+
+    out_t = r_tᵀ (S_{t-1} + diag(u) k_t v_tᵀ)
+    S_t   = diag(w_t) S_{t-1} + k_t v_tᵀ
+
+with data-dependent decay w_t ∈ (0, 1) (the paper's headline change over
+RWKV5) and per-head bonus u. Shapes: r/k/w [BH, T, K], v [BH, T, V],
+u [BH, K] → out [BH, T, V].
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rwkv6_ref(r, k, v, w, u):
+    bh, t, kd = r.shape
+    vd = v.shape[-1]
+
+    def head(r1, k1, v1, w1, u1):
+        def step(S, xs):
+            rt, kt, vt, wt = xs
+            kv = kt[:, None] * vt[None, :]                 # [K, V]
+            out = (rt[:, None] * (S + u1[:, None] * kv)).sum(0)
+            S = wt[:, None] * S + kv
+            return S, out
+
+        S0 = jnp.zeros((kd, vd), jnp.float32)
+        _, out = jax.lax.scan(step, S0, (r1, k1, v1, w1))
+        return out
+
+    return jax.vmap(head)(
+        r.astype(jnp.float32), k.astype(jnp.float32),
+        v.astype(jnp.float32), w.astype(jnp.float32), u.astype(jnp.float32),
+    )

@@ -1,0 +1,95 @@
+"""Pallas TPU kernel: chunked RWKV6 scan with data-dependent decay.
+
+TPU adaptation: the sequential recurrence is blocked into chunks of C steps.
+Within a chunk the contribution of every pair (t, j ≤ t) is computed in
+*log-decay space* — exponent differences are taken **pairwise**
+(``exp(cum[t-1] - cum[j])``), never as a factored matmul, so no channel ever
+exponentiates an unbounded cumulative decay (the classic overflow of
+linear-attention chunking). Cross-chunk state S [K, V] is carried in VMEM
+scratch across the sequential chunk grid axis.
+
+Per chunk (local cum-log-decay ``c_t = Σ_{s≤t} log w_s``, ``c_0 = 0``):
+    A[t, j] = Σ_i r[t,i]·k[j,i]·exp(c_{t-1,i} − c_{j,i})     (j <  t)
+    A[t, t] = Σ_i r[t,i]·u_i·k[t,i]
+    out     = (r ⊙ exp(c_{t-1})) @ S_in  +  A @ v
+    S_out   = diag(exp(c_C)) S_in + Σ_j (k_j ⊙ exp(c_C − c_j)) v_jᵀ
+
+VMEM per program: chunk tiles C·K·4 × 4 + pairwise tensor C²·K·4
+(C=32, K=64 → ≈ 0.3 MiB) + state K·V·4.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_CHUNK = 32
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, state_ref, *, chunk: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    r = r_ref[0].astype(jnp.float32)        # [C, K]
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)        # [C, V]
+    w = w_ref[0].astype(jnp.float32)
+    u = u_ref[0].astype(jnp.float32)        # [1, K] block
+
+    logw = jnp.log(jnp.maximum(w, 1e-12))
+    cum = jnp.cumsum(logw, axis=0)          # c_t, t = 1..C  → cum[t-1] row
+    cum_prev = cum - logw                   # c_{t-1}
+
+    # Pairwise decay exponents: exp(c_{t-1,i} - c_{j,i}) for j ≤ t-1.
+    diff = cum_prev[:, None, :] - cum[None, :, :]          # [C, C, K]
+    c = r.shape[0]
+    tri = (
+        jax.lax.broadcasted_iota(jnp.int32, (c, c), 0)
+        > jax.lax.broadcasted_iota(jnp.int32, (c, c), 1)
+    )  # strict lower triangle: j < t
+    decay = jnp.where(tri[:, :, None], jnp.exp(diff), 0.0)
+    a = jnp.sum(r[:, None, :] * k[None, :, :] * decay, axis=2)   # [C, C]
+    a = a + jnp.diag(jnp.sum(r * u * k, axis=1))
+
+    s_in = state_ref[...]                                   # [K, V]
+    r_dec = r * jnp.exp(cum_prev)
+    out = jax.lax.dot_general(
+        r_dec, s_in, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    ) + jax.lax.dot_general(a, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    o_ref[0] = out.astype(o_ref.dtype)
+
+    k_dec = k * jnp.exp(cum[-1:, :] - cum)                  # k_j ⊙ exp(c_C - c_j)
+    state_ref[...] = jnp.exp(cum[-1])[:, None] * s_in + jax.lax.dot_general(
+        k_dec, v, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def rwkv6_kernel(r, k, v, w, u, *, chunk: int = DEFAULT_CHUNK, interpret: bool = False):
+    bh, t, kd = r.shape
+    vd = v.shape[-1]
+    chunk = min(chunk, t)
+    assert t % chunk == 0, (t, chunk)
+    grid = (bh, t // chunk)
+    u3 = u[:, None, :]  # [BH, 1, K]
+    return pl.pallas_call(
+        functools.partial(_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, kd), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, kd), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, vd), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, kd), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, 1, kd), lambda b, c: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, vd), lambda b, c: (b, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, t, vd), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((kd, vd), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u3)

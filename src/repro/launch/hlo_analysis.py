@@ -1,0 +1,101 @@
+"""Roofline-term extraction from compiled XLA artifacts.
+
+``cost_analysis`` gives per-device HLO FLOPs and bytes accessed; collective
+bytes are NOT in cost_analysis, so we parse the post-SPMD HLO text and sum
+the operand sizes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute (operand shapes are printed inline in HLO
+long text: ``= bf16[512,128]{1,0} all-gather(bf16[32,128]{1,0} %p)``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(([^)]*)\)"
+)
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d.strip():
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-collective-kind operand bytes (per device, one step)."""
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for m in _OP_RE.finditer(hlo_text):
+        kind, operands = m.group(1), m.group(2)
+        total = 0
+        for sm in _SHAPE_RE.finditer(operands):
+            total += _shape_bytes(sm.group(1), sm.group(2))
+        if total == 0:
+            # fall back to the result shape just before the '='
+            pre = hlo_text[max(0, m.start() - 200) : m.start()]
+            shapes = list(_SHAPE_RE.finditer(pre))
+            if shapes:
+                total = _shape_bytes(shapes[-1].group(1), shapes[-1].group(2))
+        out[kind] += total
+        counts[kind] += 1
+    out["_counts"] = counts  # type: ignore
+    out["total"] = sum(v for k, v in out.items() if k in _COLLECTIVES)
+    return out
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    flops: float                 # per-device HLO flops
+    hbm_bytes: float             # per-device bytes accessed
+    coll_bytes: float            # per-device collective operand bytes
+    compute_s: float
+    memory_s: float
+    collective_s: float
+
+    @property
+    def dominant(self) -> str:
+        vals = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(vals, key=vals.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+
+def roofline(cost: Dict, coll: Dict, *, peak_flops: float, hbm_bw: float, link_bw: float) -> RooflineTerms:
+    flops = float(cost.get("flops", 0.0))
+    nbytes = float(cost.get("bytes accessed", 0.0))
+    cbytes = float(coll.get("total", 0.0))
+    return RooflineTerms(
+        flops=flops,
+        hbm_bytes=nbytes,
+        coll_bytes=cbytes,
+        compute_s=flops / peak_flops,
+        memory_s=nbytes / hbm_bw,
+        collective_s=cbytes / link_bw,
+    )

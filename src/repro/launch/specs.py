@@ -1,0 +1,225 @@
+"""input_specs(): ShapeDtypeStruct stand-ins + shardings for every cell.
+
+Everything here is abstract — weak-type-correct, shardable, zero allocation —
+so the dry-run can lower+compile full-size models on 512 host devices.
+
+Per-family shape conventions (documented in DESIGN.md):
+  * [vlm]/[audio-decoder-only]: ``frontend_len`` patch/frame embeddings are
+    prepended; text tokens fill the remaining ``seq_len − frontend_len``.
+  * enc-dec (seamless): encoder frames = seq_len/2, decoder tokens = seq_len/2
+    (total backbone positions = seq_len).
+  * decode shapes lower ``decode_step`` with a full-size KV cache; batch=1
+    long-context cells shard the cache's *sequence* dim over "data" instead
+    of the unshardable batch dim.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import ShapeSpec
+from repro.core.adaptive_schedule import choose_microbatches
+from repro.models import transformer as T
+from repro.models.partitioning import param_shardings
+from repro.train.optimizer import AdamWConfig, state_shapes
+from repro.train.train_step import TrainConfig, make_train_step
+
+
+def _batch_axes(mesh: Mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _dp(mesh: Mesh) -> int:
+    n = 1
+    for a in _batch_axes(mesh):
+        n *= mesh.shape[a]
+    return n
+
+
+def _tokens_layout(cfg: T.ModelConfig, shape: ShapeSpec) -> Tuple[int, int, int]:
+    """(text_len, frontend_len, enc_len) for this arch × shape."""
+    s = shape.seq_len
+    if cfg.encoder_layers:
+        return s // 2, s // 2, s // 2
+    if cfg.frontend:
+        fl = cfg.frontend_len
+        return s - fl, fl, 0
+    return s, 0, 0
+
+
+def train_config_for(cfg: T.ModelConfig, shape: ShapeSpec, mesh: Mesh) -> TrainConfig:
+    big = cfg.param_count() > 100e9
+    dp = _dp(mesh)
+    micro = choose_microbatches(
+        cfg, shape.global_batch, shape.seq_len,
+        device_count=dp,                       # model shards see the same tokens
+        budget_bytes=6 << 30,
+    ).num_microbatches
+    micro = min(micro, max(1, shape.global_batch // dp))  # keep ≥1 seq/shard
+    return TrainConfig(
+        adamw=AdamWConfig(state_dtype="bfloat16" if big else "float32"),
+        microbatches=micro,
+    )
+
+
+def use_fsdp(cfg: T.ModelConfig) -> bool:
+    return cfg.param_count() > 2e10
+
+
+# ---------------------------------------------------------------------------
+# Abstract inputs
+# ---------------------------------------------------------------------------
+
+def batch_specs(cfg: T.ModelConfig, shape: ShapeSpec, microbatches: int) -> Dict[str, Any]:
+    text, fl, enc = _tokens_layout(cfg, shape)
+    b = shape.global_batch
+    dt = jnp.bfloat16
+
+    def shp(*dims):
+        if microbatches > 1:
+            return (microbatches, dims[0] // microbatches) + dims[1:]
+        return dims
+
+    batch: Dict[str, Any] = {
+        "tokens": jax.ShapeDtypeStruct(shp(b, text), jnp.int32),
+    }
+    if cfg.encoder_layers:
+        batch["frontend"] = jax.ShapeDtypeStruct(shp(b, enc, cfg.d_model), dt)
+    elif cfg.frontend:
+        batch["frontend"] = jax.ShapeDtypeStruct(shp(b, fl, cfg.d_model), dt)
+    return batch
+
+
+def batch_shardings(cfg: T.ModelConfig, shape: ShapeSpec, microbatches: int, mesh: Mesh):
+    axes = _batch_axes(mesh)
+    dp = _dp(mesh)
+    spec_b = axes if (axes and shape.global_batch % dp == 0) else None
+
+    def mk(ndim):
+        lead = (None,) if microbatches > 1 else ()
+        rest = (None,) * (ndim - len(lead) - 1)
+        return NamedSharding(mesh, P(*lead, spec_b, *rest))
+
+    out = {"tokens": mk(2 + (1 if microbatches > 1 else 0))}
+    if cfg.encoder_layers or cfg.frontend:
+        out["frontend"] = mk(3 + (1 if microbatches > 1 else 0))
+    return out
+
+
+def cache_specs(cfg: T.ModelConfig, shape: ShapeSpec):
+    return jax.eval_shape(lambda: T.init_cache(cfg, shape.global_batch, shape.seq_len))
+
+
+def cache_shardings(cfg: T.ModelConfig, shape: ShapeSpec, mesh: Mesh):
+    axes = _batch_axes(mesh)
+    dp = _dp(mesh)
+    b = shape.global_batch
+    b_ax = axes if (axes and b % dp == 0) else None
+    seq_ax = "data" if (b_ax is None and "data" in mesh.axis_names) else None
+    tp = "model" if "model" in mesh.axis_names else None
+
+    tp_size = mesh.shape.get("model", 1)
+
+    def rule(path, leaf):
+        names = [str(getattr(k, "key", getattr(k, "idx", k))) for k in path]
+        nd = len(leaf.shape)
+        if "len" in names[-1:]:
+            return NamedSharding(mesh, P(None))
+        if "attn" in names or "memory" in names:
+            # [ng|L, B, S, KV, hd] — TP lands on whichever of (KV, hd)
+            # divides the model axis (few-KV-head GQA shards the head dim).
+            kv, hd = leaf.shape[-2], leaf.shape[-1]
+            if tp and kv % tp_size == 0:
+                return NamedSharding(mesh, P(None, b_ax, seq_ax, tp, None))
+            if tp and hd % tp_size == 0:
+                return NamedSharding(mesh, P(None, b_ax, seq_ax, None, tp))
+            return NamedSharding(mesh, P(None, b_ax, seq_ax, None, None))
+        if "mamba" in names:
+            if nd == 4 and leaf.shape[-1] == cfg.ssm_state:   # h [ng,B,di,state]
+                return NamedSharding(mesh, P(None, b_ax, tp, None))
+            return NamedSharding(mesh, P(None, b_ax, None, tp))  # conv tail
+        if "rwkv" in names:
+            if nd == 5:   # S [ng,B,H,hd,hd]
+                return NamedSharding(mesh, P(None, b_ax, tp, None, None))
+            return NamedSharding(mesh, P(None, b_ax, None))       # x_prev
+        return NamedSharding(mesh, P(*([None] * nd)))
+
+    return jax.tree_util.tree_map_with_path(rule, cache_specs(cfg, shape))
+
+
+# ---------------------------------------------------------------------------
+# Cell assembly: (step_fn, arg shapes, in_shardings, donate)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Cell:
+    fn: Any
+    args: Tuple
+    in_shardings: Tuple
+    donate_argnums: Tuple[int, ...]
+    meta: Dict[str, Any]
+
+
+def input_specs(cfg: T.ModelConfig, shape: ShapeSpec, mesh: Mesh) -> Cell:
+    fsdp = use_fsdp(cfg)
+    p_shapes = T.param_shapes(cfg)
+    p_sh = param_shardings(cfg, p_shapes, mesh, fsdp=fsdp)
+
+    if shape.kind == "train":
+        tc = train_config_for(cfg, shape, mesh)
+        o_shapes = state_shapes(tc.adamw, p_shapes)
+        o_sh = {
+            "m": param_shardings(cfg, p_shapes, mesh, fsdp=fsdp),
+            "v": param_shardings(cfg, p_shapes, mesh, fsdp=fsdp),
+            "step": NamedSharding(mesh, P()),
+        }
+        b_shapes = batch_specs(cfg, shape, tc.microbatches)
+        b_sh = batch_shardings(cfg, shape, tc.microbatches, mesh)
+        fn = make_train_step(cfg, tc)
+        return Cell(
+            fn=fn,
+            args=(p_shapes, o_shapes, b_shapes),
+            in_shardings=(p_sh, o_sh, b_sh),
+            donate_argnums=(0, 1),
+            meta={"microbatches": tc.microbatches, "fsdp": fsdp,
+                  "opt_state_dtype": tc.adamw.state_dtype},
+        )
+
+    if shape.kind == "prefill":
+        b_shapes = batch_specs(cfg, shape, 1)
+        b_sh = batch_shardings(cfg, shape, 1, mesh)
+        text, fl, enc = _tokens_layout(cfg, shape)
+        max_len = text + (fl if (cfg.frontend and not cfg.encoder_layers) else 0)
+
+        def fn(params, batch):
+            return T.prefill(cfg, params, batch, max_len)
+
+        return Cell(fn=fn, args=(p_shapes, b_shapes), in_shardings=(p_sh, b_sh),
+                    donate_argnums=(), meta={"fsdp": fsdp, "max_len": max_len})
+
+    # decode
+    c_shapes = cache_specs(cfg, shape)
+    c_sh = cache_shardings(cfg, shape, mesh)
+    tok = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    axes = _batch_axes(mesh)
+    dp = _dp(mesh)
+    tok_sh = NamedSharding(
+        mesh, P(axes if (axes and shape.global_batch % dp == 0) else None, None)
+    )
+
+    def fn(params, cache, tokens, p):
+        return T.decode_step(cfg, params, cache, tokens, p)
+
+    return Cell(
+        fn=fn,
+        args=(p_shapes, c_shapes, tok, pos),
+        in_shardings=(p_sh, c_sh, tok_sh, NamedSharding(mesh, P())),
+        donate_argnums=(1,),
+        meta={"fsdp": fsdp, "cache_len": shape.seq_len},
+    )

@@ -1,0 +1,122 @@
+"""Restart-safe training driver.
+
+``python -m repro.launch.train --arch granite-3-8b --smoke --steps 50``
+
+Fault tolerance: resumes from the latest *valid* checkpoint (corrupt/partial
+ones are digest-rejected); checkpoints are written asynchronously off the
+step path; `--fail-at N` injects a hard crash after step N for the restart
+tests. Elastic: the mesh is built from whatever devices exist, and the
+checkpoint is resharded onto it (train/elastic.py).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_NAMES, get_config, smoke_config
+from repro.core.adaptive_schedule import choose_microbatches
+from repro.models import sharding as shd
+from repro.models import transformer as T
+from repro.models.partitioning import count_params, param_shardings
+from repro.train import checkpoint as ckpt
+from repro.train.data import DataConfig, PrefetchLoader
+from repro.train.elastic import make_mesh_from_available, reshard_checkpoint
+from repro.train.optimizer import AdamWConfig
+from repro.train.train_step import TrainConfig, init_all, make_train_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-8b", choices=ARCH_NAMES)
+    ap.add_argument("--smoke", action="store_true", help="reduced config (CPU scale)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--model-axis", type=int, default=1)
+    ap.add_argument("--memory-budget-gb", type=float, default=4.0)
+    ap.add_argument("--fail-at", type=int, default=-1, help="inject crash after step N")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    mesh = make_mesh_from_available(model_axis=args.model_axis)
+    dp = mesh.shape["data"]
+
+    # BFS/DFS-adaptive microbatching (paper Alg. 5 applied to training)
+    decision = choose_microbatches(
+        cfg, args.global_batch, args.seq_len, device_count=dp,
+        budget_bytes=int(args.memory_budget_gb * (1 << 30)),
+    )
+    micro = min(decision.num_microbatches, max(1, args.global_batch // dp))
+    tc = TrainConfig(
+        adamw=AdamWConfig(learning_rate=args.lr, warmup_steps=10, total_steps=args.steps),
+        microbatches=micro,
+    )
+    print(f"[train] {cfg.name}: {decision.note}, microbatches={micro}, mesh={dict(mesh.shape)}")
+
+    start_step = 0
+    with shd.activate(mesh), mesh:
+        if args.ckpt_dir and (latest := ckpt.latest_step(args.ckpt_dir)) is not None:
+            print(f"[train] resuming from valid checkpoint step {latest}")
+            params, opt_state, extra = reshard_checkpoint(
+                args.ckpt_dir, latest, cfg, tc, mesh
+            )
+            start_step = latest
+        else:
+            params, opt_state = init_all(cfg, tc, jax.random.key(args.seed))
+            p_sh = param_shardings(cfg, params, mesh)
+            params = jax.device_put(params, p_sh)
+        print(f"[train] params: {count_params(params):,}")
+
+        step_fn = jax.jit(make_train_step(cfg, tc), donate_argnums=(0, 1))
+        dc = DataConfig(
+            vocab_size=cfg.vocab_size, seq_len=args.seq_len,
+            global_batch=args.global_batch, microbatches=micro, seed=args.seed,
+            frontend=cfg.frontend or ("audio" if cfg.encoder_layers else None),
+            frontend_len=max(cfg.frontend_len, 8), d_model=cfg.d_model,
+        )
+        loader = PrefetchLoader(dc, start_step=start_step)
+        t0 = time.time()
+        tokens_done = 0
+        try:
+            for step in range(start_step, args.steps):
+                batch = next(loader)
+                jb = {k: jnp.asarray(v) for k, v in batch.items()}
+                if "frontend" in jb:
+                    jb["frontend"] = jb["frontend"].astype(jnp.bfloat16)
+                params, opt_state, metrics = step_fn(params, opt_state, jb)
+                tokens_done += args.global_batch * args.seq_len
+                if (step + 1) % args.log_every == 0 or step == start_step:
+                    dt = time.time() - t0
+                    print(
+                        f"step {step + 1:5d} loss={float(metrics['loss']):.4f} "
+                        f"gnorm={float(metrics['grad_norm']):.3f} "
+                        f"lr={float(metrics['lr']):.2e} tok/s={tokens_done / max(dt, 1e-9):,.0f} "
+                        f"stalls={loader.stalls}"
+                    )
+                if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
+                    ckpt.save_async(args.ckpt_dir, step + 1, params, opt_state)
+                if args.fail_at >= 0 and step + 1 >= args.fail_at:
+                    print(f"[train] injected failure at step {step + 1}", flush=True)
+                    os._exit(42)
+        finally:
+            loader.close()
+        if args.ckpt_dir:
+            ckpt.wait_pending(args.ckpt_dir)
+            if ckpt.latest_step(args.ckpt_dir) != args.steps:
+                ckpt.save(args.ckpt_dir, args.steps, params, opt_state)
+        print(f"[train] done: final loss {float(metrics['loss']):.4f}")
+        return float(metrics["loss"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,128 @@
+"""Parameter → PartitionSpec rules (megatron TP over "model", optional FSDP
+over "data", EP for experts over the (pod, data) product).
+
+Rules are path-based over the params pytree; stacked scan dims (leading
+``num_groups`` axis on block params) are never sharded... except under FSDP,
+where the stacked-layer axis is the ZeRO shard axis (scan gathers one layer
+slice at a time, which is exactly per-layer FSDP all-gather, overlappable by
+XLA's latency-hiding scheduler).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.transformer import ModelConfig
+
+# name → spec template for the *last ndim* axes (no stacked dim).
+_COL = ("wq", "wk", "wv", "w_gate", "w_up", "in_proj", "dt_proj", "wr", "wg", "w_b")
+_ROW = ("wo", "w_down", "out_proj", "x_proj")
+_VEC_MODEL = ("conv_b", "dt_bias", "d_skip", "w0", "ln_out")
+
+
+def _leaf_spec(path: str, ndim: int, cfg: ModelConfig, ep_axis) -> P:
+    name = path.split("/")[-1]
+    moe = "/moe/" in path or path.endswith("router")
+    if moe and ndim >= 3:
+        # expert tensors [E, d, ff] / [E, ff, d]
+        if name in ("w_gate", "w_up"):
+            return P(ep_axis, None, "model")
+        if name == "w_down":
+            return P(ep_axis, "model", None)
+    if name == "router":
+        return P(None, None)
+    if name == "embed":
+        return P("model", None)
+    if name == "lm_head":
+        return P(None, "model")
+    if name in _COL and ndim >= 2:
+        return P(*([None] * (ndim - 1)), "model")
+    if name in _ROW and ndim >= 2:
+        return P("model", *([None] * (ndim - 1)))
+    if name == "conv_w":
+        return P(None, "model")
+    if name == "a_log":
+        return P("model", None)
+    if name == "u":
+        return P("model", None)
+    if name in _VEC_MODEL:
+        return P("model")
+    return P(*([None] * ndim))
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def param_pspecs(cfg: ModelConfig, params_tree, *, fsdp: bool = False) -> Any:
+    """PartitionSpec pytree matching ``params_tree`` (arrays or ShapeDtypeStructs)."""
+    ep_axis = ("pod", "data") if cfg.num_experts else None
+
+    def one(path, leaf):
+        pstr = _path_str(path)
+        ndim = len(leaf.shape)
+        stacked = pstr.startswith("blocks/") or pstr.startswith("encoder/") or pstr.startswith("cross/")
+        base_ndim = ndim - 1 if stacked else ndim
+        spec = _leaf_spec(pstr, base_ndim, cfg, ep_axis)
+        used = {a for ax in spec for a in (ax if isinstance(ax, tuple) else (ax,))}
+        if fsdp and base_ndim >= 2 and "data" not in used:
+            # ZeRO-3: add "data" on the first unsharded *feature* axis whose
+            # size divides (never the stacked scan axis — group counts like
+            # 35/40 don't divide the data axis; d_model/d_ff always do).
+            axes = list(spec)
+            shape_tail = leaf.shape[1:] if stacked else leaf.shape
+            for i, ax in enumerate(axes):
+                if ax is None and shape_tail[i] % 16 == 0 and shape_tail[i] >= 256:
+                    axes[i] = "data"
+                    break
+            spec = P(*axes)
+        if stacked:
+            spec = P(None, *spec)
+        return spec
+
+    return jax.tree_util.tree_map_with_path(one, params_tree)
+
+
+def param_shardings(cfg: ModelConfig, params_tree, mesh: Mesh, *, fsdp: bool = False):
+    specs = param_pspecs(cfg, params_tree, fsdp=fsdp)
+
+    def fix(spec, leaf):
+        # Drop axes not present in this mesh (single-pod vs multi-pod). For
+        # *tuple* axes (expert EP over pod×data) additionally enforce exact
+        # divisibility by dropping leading axes — the MoE shard_map requires
+        # it; single named axes may stay uneven (GSPMD pads, e.g. 56 heads/16).
+        cleaned = []
+        for i, ax in enumerate(spec):
+            dim = leaf.shape[i] if i < len(leaf.shape) else 1
+            if ax is None:
+                cleaned.append(None)
+            elif isinstance(ax, tuple):
+                got = tuple(a for a in ax if a in mesh.axis_names)
+                while got:
+                    size = 1
+                    for a in got:
+                        size *= mesh.shape[a]
+                    if dim % size == 0:
+                        break
+                    got = got[1:]
+                cleaned.append(got if got else None)
+            else:
+                cleaned.append(ax if ax in mesh.axis_names else None)
+        return NamedSharding(mesh, P(*cleaned))
+
+    return jax.tree.map(fix, specs, params_tree)
+
+
+def count_params(params_tree) -> int:
+    return sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params_tree))

@@ -1,0 +1,76 @@
+"""Activation/weight sharding helpers, mesh-agnostic.
+
+Model code calls ``shard(x, "data", None, "model")``; the constraint is applied
+only for axis names present in the *active* mesh (set by the launcher /
+dry-run), so the same model runs unsharded on the 1-device CI box and fully
+sharded on the production mesh. The batch axis name ``"data"`` expands to
+``("pod", "data")`` automatically when a pod axis exists (multi-pod DP).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, PartitionSpec as P
+
+_state = threading.local()
+
+
+def active_axes() -> tuple:
+    return getattr(_state, "axes", ())
+
+
+def active_mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+def axis_size(name: str) -> int:
+    mesh = active_mesh()
+    if mesh is None or name not in mesh.axis_names:
+        return 1
+    return mesh.shape[name]
+
+
+def batch_axes() -> tuple:
+    """Mesh axes that carry data parallelism (pod × data)."""
+    axes = active_axes()
+    return tuple(a for a in ("pod", "data") if a in axes)
+
+
+@contextlib.contextmanager
+def activate(mesh: Optional[Mesh]):
+    prev_axes = getattr(_state, "axes", ())
+    prev_mesh = getattr(_state, "mesh", None)
+    _state.axes = tuple(mesh.axis_names) if mesh is not None else ()
+    _state.mesh = mesh
+    try:
+        yield
+    finally:
+        _state.axes = prev_axes
+        _state.mesh = prev_mesh
+
+
+def _resolve(axis):
+    """Map a logical axis to mesh axes; None/absent axes drop out."""
+    axes = active_axes()
+    if axis is None:
+        return None
+    if isinstance(axis, (tuple, list)):
+        got = tuple(a for a in axis if a in axes)
+        return got if got else None
+    if axis == "data" and "pod" in axes:
+        return ("pod", "data") if "data" in axes else ("pod",)
+    return axis if axis in axes else None
+
+
+def pspec(*axes) -> P:
+    return P(*[_resolve(a) for a in axes])
+
+
+def shard(x: jax.Array, *axes) -> jax.Array:
+    """with_sharding_constraint against the active mesh (no-op if unsharded)."""
+    if not active_axes():
+        return x
+    return jax.lax.with_sharding_constraint(x, pspec(*axes))

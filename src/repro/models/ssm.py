@@ -1,0 +1,210 @@
+"""Attention-free token mixers: Mamba (jamba's 7/8 layers) and RWKV6.
+
+Both are linear recurrences; training/prefill uses chunked scans (bounded
+memory, remat-friendly), decode carries O(1) state per layer.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rwkv6 import ops as rwkv_ops
+from repro.models.layers import dense_init, rmsnorm
+from repro.models.sharding import shard
+
+
+# ---------------------------------------------------------------------------
+# Mamba (selective SSM)
+# ---------------------------------------------------------------------------
+
+def mamba_init(key, d_model: int, *, expand: int = 2, state: int = 16,
+               conv_dim: int = 4, dt_rank: int | None = None, dtype=jnp.bfloat16) -> Dict:
+    d_inner = expand * d_model
+    dt_rank = dt_rank or max(1, d_model // 16)
+    ks = jax.random.split(key, 8)
+    return {
+        "in_proj": dense_init(ks[0], (d_model, 2 * d_inner), dtype),
+        "conv_w": dense_init(ks[1], (conv_dim, d_inner), dtype, scale=0.5),
+        "conv_b": jnp.zeros((d_inner,), dtype),
+        "x_proj": dense_init(ks[2], (d_inner, dt_rank + 2 * state), dtype),
+        "dt_proj": dense_init(ks[3], (dt_rank, d_inner), dtype),
+        "dt_bias": jnp.zeros((d_inner,), jnp.float32),
+        "a_log": jnp.log(
+            jnp.broadcast_to(jnp.arange(1, state + 1, dtype=jnp.float32), (d_inner, state))
+        ),
+        "d_skip": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": dense_init(ks[4], (d_inner, d_model), dtype),
+    }
+
+
+def _causal_conv(x, w, b, tail=None):
+    """x [B,S,Di], w [K,Di] depthwise causal conv. tail [B,K-1,Di] carries
+    decode state; returns (y, new_tail)."""
+    k = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)
+    y = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(k))
+    new_tail = xp[:, -(k - 1):] if k > 1 else tail
+    return y + b, new_tail
+
+
+def _ssm_scan_chunked(a, bx, c, h0, chunk: int):
+    """y_t = Σ_s h_t[·,s]·c_t[s],  h_t = a_t ⊙ h_{t-1} + bx_t.
+
+    a, bx: [B, T, Di, S]; c: [B, T, S]; h0: [B, Di, S].
+    Chunked lax.scan: O(T/chunk) checkpoints, chunk recomputed in backward.
+    """
+    b, t, di, s = a.shape
+    chunk = min(chunk, t)
+    assert t % chunk == 0
+    n = t // chunk
+
+    def run_chunk(h, xs):
+        ac, bxc, cc = xs  # [B, C, Di, S], [B, C, S]
+
+        def step(h, inner):
+            at, bt, ct = inner
+            h = at * h + bt
+            y = jnp.einsum("bds,bs->bd", h, ct)
+            return h, y
+
+        h, ys = jax.lax.scan(
+            step, h,
+            (ac.transpose(1, 0, 2, 3), bxc.transpose(1, 0, 2, 3), cc.transpose(1, 0, 2)),
+        )
+        return h, ys.transpose(1, 0, 2)  # [B, C, Di]
+
+    ar = a.reshape(b, n, chunk, di, s).transpose(1, 0, 2, 3, 4)
+    bxr = bx.reshape(b, n, chunk, di, s).transpose(1, 0, 2, 3, 4)
+    cr = c.reshape(b, n, chunk, s).transpose(1, 0, 2, 3)
+    h, ys = jax.lax.scan(jax.checkpoint(run_chunk), h0, (ar, bxr, cr))
+    return ys.transpose(1, 0, 2, 3).reshape(b, t, di), h
+
+
+def mamba_block(params: Dict, x: jax.Array, state=None, chunk: int = 128):
+    """x [B,S,d] → (y [B,S,d], new_state). state = (conv_tail, h)."""
+    b, s, d = x.shape
+    d_inner = params["in_proj"].shape[1] // 2
+    nstate = params["a_log"].shape[1]
+    xz = x @ params["in_proj"]
+    x1, z = jnp.split(xz, 2, axis=-1)
+    x1 = shard(x1, "data", None, "model")
+    conv_tail = None if state is None else state[0]
+    x1, new_tail = _causal_conv(x1, params["conv_w"], params["conv_b"], conv_tail)
+    x1 = jax.nn.silu(x1)
+
+    proj = x1 @ params["x_proj"]
+    dt_rank = params["dt_proj"].shape[0]
+    dt, bmat, cmat = jnp.split(proj, [dt_rank, dt_rank + nstate], axis=-1)
+    dt = jax.nn.softplus(
+        (dt @ params["dt_proj"]).astype(jnp.float32) + params["dt_bias"]
+    )  # [B,S,Di]
+    a = -jnp.exp(params["a_log"])                       # [Di, S]
+    decay = jnp.exp(dt[..., None] * a)                  # [B,S,Di,S]
+    bx = (dt * x1.astype(jnp.float32))[..., None] * bmat.astype(jnp.float32)[:, :, None, :]
+
+    h0 = (
+        jnp.zeros((b, d_inner, nstate), jnp.float32) if state is None else state[1]
+    )
+    if s == 1:  # decode fast path
+        h = decay[:, 0] * h0 + bx[:, 0]
+        y = jnp.einsum("bds,bs->bd", h, cmat.astype(jnp.float32)[:, 0])[:, None]
+        new_h = h
+    else:
+        y, new_h = _ssm_scan_chunked(decay, bx, cmat.astype(jnp.float32), h0, chunk)
+    y = y + params["d_skip"] * x1.astype(jnp.float32)
+    y = (y.astype(x.dtype) * jax.nn.silu(z))
+    y = shard(y, "data", None, "model")
+    out = y @ params["out_proj"]
+    return shard(out, "data", None, None), (new_tail, new_h)
+
+
+def mamba_state_shape(cfg_d_model: int, batch: int, *, expand=2, state=16, conv_dim=4):
+    d_inner = expand * cfg_d_model
+    return (
+        (batch, conv_dim - 1, d_inner),   # conv tail
+        (batch, d_inner, state),          # h
+    )
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 block
+# ---------------------------------------------------------------------------
+
+def rwkv6_init(key, d_model: int, num_heads: int, dtype=jnp.bfloat16, lora: int = 64) -> Dict:
+    hd = d_model // num_heads
+    ks = jax.random.split(key, 10)
+    return {
+        "mix_r": jnp.full((d_model,), 0.5, jnp.float32),
+        "mix_k": jnp.full((d_model,), 0.5, jnp.float32),
+        "mix_v": jnp.full((d_model,), 0.5, jnp.float32),
+        "mix_w": jnp.full((d_model,), 0.5, jnp.float32),
+        "mix_g": jnp.full((d_model,), 0.5, jnp.float32),
+        "wr": dense_init(ks[0], (d_model, d_model), dtype),
+        "wk": dense_init(ks[1], (d_model, d_model), dtype),
+        "wv": dense_init(ks[2], (d_model, d_model), dtype),
+        "wg": dense_init(ks[3], (d_model, d_model), dtype),
+        "w0": jnp.full((d_model,), -2.0, jnp.float32),
+        "w_a": dense_init(ks[4], (d_model, lora), dtype, scale=0.01),
+        "w_b": dense_init(ks[5], (lora, d_model), dtype, scale=0.01),
+        "u": dense_init(ks[6], (num_heads, hd), jnp.float32, scale=0.3),
+        "ln_out": jnp.ones((d_model,), jnp.float32),
+        "wo": dense_init(ks[7], (d_model, d_model), dtype),
+    }
+
+
+def rwkv6_block(params: Dict, x: jax.Array, num_heads: int, state=None, chunk: int = 64):
+    """x [B,S,d] → (y, new_state). state = (x_prev [B,d], S [B,H,hd,hd])."""
+    b, s, d = x.shape
+    hd = d // num_heads
+    x_prev = jnp.zeros((b, d), x.dtype) if state is None else state[0]
+    xs = jnp.concatenate([x_prev[:, None], x[:, :-1]], axis=1)  # token shift
+
+    def mix(mu):
+        return x + mu.astype(x.dtype) * (xs - x)
+
+    r = mix(params["mix_r"]) @ params["wr"]
+    k = mix(params["mix_k"]) @ params["wk"]
+    v = mix(params["mix_v"]) @ params["wv"]
+    g = mix(params["mix_g"]) @ params["wg"]
+    xw = mix(params["mix_w"])
+    # Data-dependent decay (the Finch contribution): per-channel LoRA.
+    # Upper clamp 1.2 bounds |log w| ≤ e^1.2 ≈ 3.3 per step: decays faster
+    # than that zero the state within ~5 tokens anyway, and the bound is what
+    # lets the chunked path use the stable factored matmul (kernels/rwkv6).
+    logdecay = params["w0"] + (jnp.tanh(xw @ params["w_a"]) @ params["w_b"]).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(jnp.clip(logdecay, -8.0, 1.2)))        # (0.036, 1)
+
+    def heads(t):  # [B,S,d] -> [B*H, S, hd]
+        return t.reshape(b, s, num_heads, hd).transpose(0, 2, 1, 3).reshape(b * num_heads, s, hd)
+
+    u = jnp.broadcast_to(params["u"][None], (b, num_heads, hd)).reshape(b * num_heads, hd)
+    if s == 1 and state is not None:
+        s_in = state[1].reshape(b * num_heads, hd, hd)
+        s_out, o = rwkv_ops.rwkv6_decode_step(
+            s_in, heads(r)[:, 0], heads(k)[:, 0], heads(v)[:, 0],
+            heads(w.astype(x.dtype))[:, 0], u,
+        )
+        o = o[:, None]
+        new_s = s_out.reshape(b, num_heads, hd, hd)
+    elif state is not None:
+        # prefill: chunked scan that also returns the carried state.
+        ck = chunk if s % chunk == 0 else 1
+        o, s_fin = rwkv_ops.rwkv6_chunked(
+            heads(r), heads(k), heads(v), heads(w.astype(x.dtype)), u,
+            chunk=ck, return_state=True,
+        )
+        new_s = s_fin.reshape(b, num_heads, hd, hd)
+    else:
+        o = rwkv_ops.rwkv6(heads(r), heads(k), heads(v), heads(w.astype(x.dtype)), u, chunk=chunk)
+        new_s = None  # full-sequence training: state not carried
+    o = o.reshape(b, num_heads, s, hd).transpose(0, 2, 1, 3).reshape(b, s, d)
+    # per-head group norm
+    o = rmsnorm(o.reshape(b, s, num_heads, hd), jnp.zeros((hd,), jnp.float32)).reshape(b, s, d)
+    o = (o.astype(x.dtype) * jax.nn.silu(g)) * params["ln_out"].astype(x.dtype)
+    out = o @ params["wo"]
+    new_xprev = x[:, -1]
+    return shard(out, "data", None, None), (new_xprev, new_s)

@@ -1,0 +1,565 @@
+"""Unified model zoo: decoder-only / MoE / hybrid-SSM / enc-dec architectures.
+
+One config dataclass describes every assigned architecture; layers are grouped
+by the repeating pattern period and scanned (``lax.scan`` over stacked params)
+so the compiled HLO stays small and compile times are flat in depth. Mixers:
+global/local GQA attention, Mamba, RWKV6. MLPs: dense SwiGLU, MoE (with HUGE
+push/pull-hybrid dispatch), arctic-style MoE+dense-residual.
+
+API:
+  init_params(cfg, key)                        → params pytree (smoke scale)
+  param_shapes(cfg)                            → ShapeDtypeStruct pytree (dry-run)
+  forward(cfg, params, batch)                  → logits
+  loss_fn(cfg, params, batch)                  → scalar loss
+  init_cache(cfg, batch, max_len)              → decode cache (shapes or arrays)
+  prefill(cfg, params, batch, max_len)         → (cache, last_logits)
+  decode_step(cfg, params, cache, tokens, pos) → (logits, cache)
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hybrid_comm import moe_dispatch_mode
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (
+    AttnSpec,
+    attention_block,
+    attn_init,
+    dense_init,
+    dtype_of,
+    mlp_block,
+    mlp_init,
+    rmsnorm,
+)
+from repro.models.sharding import active_mesh, axis_size, shard
+
+
+# ---------------------------------------------------------------------------
+# Config
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | hybrid | ssm | encdec | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                # 0 → d_model // num_heads
+    # mixer / mlp patterns, cycled over layers
+    layer_pattern: Tuple[str, ...] = ("attn",)          # attn | attn_local | mamba | rwkv
+    mlp_pattern: Tuple[str, ...] = ("dense",)           # dense | moe | moe_dense
+    # attention
+    rope_theta: float = 1e4
+    rope_fraction: float = 1.0
+    local_window: int = 4096
+    attn_softcap: Optional[float] = None
+    logit_softcap: Optional[float] = None
+    qkv_bias: bool = False
+    tie_embeddings: bool = False
+    attn_chunk: int = 512
+    # moe
+    num_experts: int = 0
+    experts_per_token: int = 0
+    moe_d_ff: int = 0
+    moe_comm: str = "auto"           # auto | push | pull | local
+    # ssm
+    ssm_state: int = 16
+    ssm_conv: int = 4
+    mamba_expand: int = 2
+    # enc-dec
+    encoder_layers: int = 0
+    # modality frontend stub: inputs arrive as precomputed embeddings
+    frontend: Optional[str] = None   # "audio" | "vision"
+    frontend_len: int = 0
+    # misc
+    norm_eps: float = 1e-5
+    dtype: str = "bfloat16"
+    sub_quadratic: bool = False      # eligible for long_500k decode
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def vocab_padded(self) -> int:
+        """Embedding rows padded to a multiple of 64 so the vocab axis shards
+        evenly over model=16 (padded logits are masked to -inf)."""
+        return ((self.vocab_size + 63) // 64) * 64
+
+    @property
+    def period(self) -> int:
+        return int(math.lcm(len(self.layer_pattern), len(self.mlp_pattern)))
+
+    @property
+    def num_groups(self) -> int:
+        assert self.num_layers % self.period == 0, (self.num_layers, self.period)
+        return self.num_layers // self.period
+
+    def mixer_at(self, pos: int) -> str:
+        return self.layer_pattern[pos % len(self.layer_pattern)]
+
+    def mlp_at(self, pos: int) -> str:
+        return self.mlp_pattern[pos % len(self.mlp_pattern)]
+
+    def attn_spec(self, local: bool) -> AttnSpec:
+        return AttnSpec(
+            num_heads=self.num_heads,
+            num_kv_heads=self.num_kv_heads,
+            head_dim=self.hd,
+            rope_theta=self.rope_theta,
+            rope_fraction=self.rope_fraction,
+            window=self.local_window if local else None,
+            attn_softcap=self.attn_softcap,
+            bias=self.qkv_bias,
+            causal=True,
+        )
+
+    def scaled(self, **overrides) -> "ModelConfig":
+        return dataclasses.replace(self, **overrides)
+
+    def param_count(self) -> int:
+        """Analytic total parameter count (for roofline MODEL_FLOPS)."""
+        d, ff, v, hd = self.d_model, self.d_ff, self.vocab_size, self.hd
+        total = v * d + (0 if self.tie_embeddings else v * d)
+        for l in range(self.num_layers):
+            mixer = self.mixer_at(l)
+            if mixer in ("attn", "attn_local"):
+                total += d * (self.num_heads + 2 * self.num_kv_heads) * hd + self.num_heads * hd * d
+            elif mixer == "mamba":
+                di = self.mamba_expand * d
+                total += d * 2 * di + di * d + di * (max(1, d // 16) + 2 * self.ssm_state) + di * self.ssm_conv
+            elif mixer == "rwkv":
+                total += 5 * d * d + 2 * d * 64
+            mlp = self.mlp_at(l)
+            if mlp in ("dense",):
+                total += 3 * d * ff
+            if mlp in ("moe", "moe_dense"):
+                total += 3 * d * self.moe_d_ff * self.num_experts + d * self.num_experts
+            if mlp == "moe_dense":
+                total += 3 * d * ff
+        if self.encoder_layers:
+            # encoder self-attn + mlp + decoder cross-attn
+            total += self.encoder_layers * (
+                d * (self.num_heads + 2 * self.num_kv_heads) * hd + self.num_heads * hd * d + 3 * d * ff
+            )
+            total += self.num_layers * (d * (self.num_heads + 2 * self.num_kv_heads) * hd + self.num_heads * hd * d)
+        return total
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: top-k experts only)."""
+        if not self.num_experts:
+            return self.param_count()
+        d = self.d_model
+        dense = self.param_count() - self.num_layers_moe() * 3 * d * self.moe_d_ff * self.num_experts
+        return dense + self.num_layers_moe() * 3 * d * self.moe_d_ff * self.experts_per_token
+
+    def num_layers_moe(self) -> int:
+        return sum(1 for l in range(self.num_layers) if self.mlp_at(l) in ("moe", "moe_dense"))
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _position_init(cfg: ModelConfig, pos: int, key) -> Dict:
+    dt = dtype_of(cfg.dtype)
+    ks = jax.random.split(key, 4)
+    p: Dict[str, Any] = {"ln1": jnp.zeros((cfg.d_model,), jnp.float32),
+                         "ln2": jnp.zeros((cfg.d_model,), jnp.float32)}
+    mixer = cfg.mixer_at(pos)
+    if mixer in ("attn", "attn_local"):
+        p["attn"] = attn_init(ks[0], cfg.d_model, cfg.attn_spec(mixer == "attn_local"), dt)
+    elif mixer == "mamba":
+        p["mamba"] = ssm_mod.mamba_init(
+            ks[0], cfg.d_model, expand=cfg.mamba_expand, state=cfg.ssm_state,
+            conv_dim=cfg.ssm_conv, dtype=dt,
+        )
+    elif mixer == "rwkv":
+        p["rwkv"] = ssm_mod.rwkv6_init(ks[0], cfg.d_model, cfg.num_heads, dtype=dt)
+    mlp = cfg.mlp_at(pos)
+    if mlp in ("dense", "moe_dense"):
+        p["mlp"] = mlp_init(ks[1], cfg.d_model, cfg.d_ff, dt)
+    if mlp in ("moe", "moe_dense"):
+        p["moe"] = moe_mod.moe_init(ks[2], cfg.d_model, cfg.moe_d_ff, cfg.num_experts, dt)
+    return p
+
+
+def init_params(cfg: ModelConfig, key) -> Dict:
+    dt = dtype_of(cfg.dtype)
+    keys = jax.random.split(key, cfg.num_groups * cfg.period + 8)
+    blocks = []
+    for pos in range(cfg.period):
+        per_group = [
+            _position_init(cfg, pos, keys[g * cfg.period + pos]) for g in range(cfg.num_groups)
+        ]
+        blocks.append(jax.tree.map(lambda *xs: jnp.stack(xs), *per_group))
+    params: Dict[str, Any] = {
+        "embed": dense_init(keys[-1], (cfg.vocab_padded, cfg.d_model), dt, scale=0.02),
+        "blocks": tuple(blocks),
+        "final_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(keys[-2], (cfg.d_model, cfg.vocab_padded), dt)
+    if cfg.encoder_layers:
+        enc = [
+            {
+                "ln1": jnp.zeros((cfg.d_model,), jnp.float32),
+                "ln2": jnp.zeros((cfg.d_model,), jnp.float32),
+                "attn": attn_init(keys[i], cfg.d_model, cfg.attn_spec(False), dt),
+                "mlp": mlp_init(keys[i + 1], cfg.d_model, cfg.d_ff, dt),
+            }
+            for i in range(cfg.encoder_layers)
+        ]
+        params["encoder"] = jax.tree.map(lambda *xs: jnp.stack(xs), *enc)
+        params["enc_norm"] = jnp.zeros((cfg.d_model,), jnp.float32)
+        xa = [
+            {
+                "ln": jnp.zeros((cfg.d_model,), jnp.float32),
+                "attn": attn_init(keys[-3 - i], cfg.d_model, cfg.attn_spec(False), dt),
+            }
+            for i in range(cfg.num_layers)
+        ]
+        params["cross"] = jax.tree.map(lambda *xs: jnp.stack(xs), *xa)
+    return params
+
+
+def param_shapes(cfg: ModelConfig):
+    """Abstract params for the dry-run — no allocation."""
+    return jax.eval_shape(lambda k: init_params(cfg, k), jax.random.key(0))
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+def _moe_comm_mode(cfg: ModelConfig, tokens_per_step: int) -> str:
+    if cfg.moe_comm != "auto":
+        return cfg.moe_comm
+    dp = axis_size("data") * axis_size("pod")
+    if dp <= 1:
+        return "local"
+    dec = moe_dispatch_mode(
+        tokens_per_step=tokens_per_step, d_model=cfg.d_model, d_ff=cfg.moe_d_ff,
+        num_experts=cfg.num_experts, experts_per_token=cfg.experts_per_token,
+        dp_degree=dp,
+    )
+    return dec.mode
+
+
+def _apply_position(cfg: ModelConfig, pos: int, p: Dict, x, positions, cache,
+                    comm_mode: str, memory=None):
+    mixer = cfg.mixer_at(pos)
+    new_cache = {}
+    h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    if mixer in ("attn", "attn_local"):
+        spec = cfg.attn_spec(mixer == "attn_local")
+        att, kv = attention_block(
+            p["attn"], h, spec, positions,
+            cache.get("attn") if cache else None, chunk=cfg.attn_chunk,
+        )
+        x = x + att
+        if kv is not None:
+            new_cache["attn"] = kv
+    elif mixer == "mamba":
+        y, st = ssm_mod.mamba_block(p["mamba"], h, None if cache is None else cache.get("mamba"))
+        x = x + y
+        if cache is not None:
+            new_cache["mamba"] = st
+    elif mixer == "rwkv":
+        y, st = ssm_mod.rwkv6_block(
+            p["rwkv"], h, cfg.num_heads, None if cache is None else cache.get("rwkv")
+        )
+        x = x + y
+        if cache is not None:
+            new_cache["rwkv"] = st
+    # cross-attention (enc-dec decoders): memory is the encoder output
+    if memory is not None and "cross" in p:
+        hc = rmsnorm(x, p["cross"]["ln"], cfg.norm_eps)
+        spec = dataclasses.replace(cfg.attn_spec(False), causal=False)
+        mem_k, mem_v = memory
+        xa = _cross_attention(p["cross"]["attn"], hc, mem_k, mem_v, spec)
+        x = x + xa
+    mlp = cfg.mlp_at(pos)
+    h2 = rmsnorm(x, p["ln2"], cfg.norm_eps)
+    delta = 0.0
+    if mlp in ("dense", "moe_dense"):
+        delta = mlp_block(p["mlp"], h2)
+    if mlp in ("moe", "moe_dense"):
+        delta = delta + moe_mod.moe_block(
+            p["moe"], h2, experts_per_token=cfg.experts_per_token, comm_mode=comm_mode
+        )
+    x = x + delta
+    return x, new_cache
+
+
+def _cross_attention(p, h, mem_k, mem_v, spec):
+    """Decoder→encoder attention with precomputed K/V memory."""
+    b, s, d = h.shape
+    hq, kvh, dh = spec.num_heads, spec.num_kv_heads, spec.head_dim
+    q = (h @ p["wq"]).reshape(b, s, hq, dh)
+    from repro.models.layers import _sdpa  # shared inner attention
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    out = _sdpa(q, mem_k, mem_v, dataclasses.replace(spec, causal=False), pos)
+    return out.reshape(b, s, hq * dh) @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# Forward / loss
+# ---------------------------------------------------------------------------
+
+def _embed(cfg: ModelConfig, params, tokens, frontend_emb):
+    dt = dtype_of(cfg.dtype)
+    emb = shard(params["embed"], "model", None)
+    x = jnp.take(emb, jnp.clip(tokens, 0, cfg.vocab_size - 1), axis=0) * (cfg.d_model ** 0.5)
+    x = x.astype(dt)
+    if frontend_emb is not None and cfg.family != "audio":
+        x = jnp.concatenate([frontend_emb.astype(dt), x], axis=1)
+    return shard(x, "data", None, None)
+
+
+def _logits(cfg: ModelConfig, params, x):
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    head = shard(head, None, "model")
+    logits = x @ head
+    if cfg.logit_softcap is not None:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    if cfg.vocab_padded != cfg.vocab_size:
+        pad_mask = jnp.arange(cfg.vocab_padded) < cfg.vocab_size
+        logits = jnp.where(pad_mask, logits, jnp.asarray(-1e30, logits.dtype))
+    return shard(logits, "data", None, "model")
+
+
+def _encode(cfg: ModelConfig, params, enc_emb):
+    """Run the encoder stack over frontend embeddings (seamless)."""
+    x = shard(enc_emb.astype(dtype_of(cfg.dtype)), "data", None, None)
+    pos = jnp.broadcast_to(jnp.arange(x.shape[1])[None], x.shape[:2])
+
+    def body(x, p):
+        h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+        spec = dataclasses.replace(cfg.attn_spec(False), causal=False)
+        att, _ = attention_block(p["attn"], h, spec, pos, None, chunk=cfg.attn_chunk)
+        x = x + att
+        x = x + mlp_block(p["mlp"], rmsnorm(x, p["ln2"], cfg.norm_eps))
+        return x, None
+
+    x, _ = jax.lax.scan(jax.checkpoint(body), x, params["encoder"])
+    return rmsnorm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _memory_kv(cfg, cross_p, enc_out):
+    """Precompute cross-attention K/V from encoder output (per layer)."""
+    b, s, d = enc_out.shape
+    kvh, dh = cfg.num_kv_heads, cfg.hd
+
+    def one(p):
+        k = (enc_out @ p["attn"]["wk"]).reshape(b, s, kvh, dh)
+        v = (enc_out @ p["attn"]["wv"]).reshape(b, s, kvh, dh)
+        return k, v
+
+    return jax.vmap(one)(cross_p)  # stacked [L, ...]
+
+
+def forward(cfg: ModelConfig, params, batch: Dict) -> jax.Array:
+    tokens = batch["tokens"]
+    frontend_emb = batch.get("frontend")
+    x = _embed(cfg, params, tokens, frontend_emb)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    tokens_per_step = b * s
+    comm_mode = _moe_comm_mode(cfg, tokens_per_step)
+
+    memory = None
+    cross_kv = None
+    if cfg.encoder_layers:
+        assert frontend_emb is not None, "enc-dec needs encoder (frontend) inputs"
+        enc_out = _encode(cfg, params, frontend_emb)
+        cross_kv = _memory_kv(cfg, params["cross"], enc_out)
+
+    def group(x, xs):
+        if cfg.encoder_layers:
+            gp, cross_g = xs
+        else:
+            gp, cross_g = xs, None
+        for pos in range(cfg.period):
+            p = dict(gp[pos])
+            mem = None
+            if cross_g is not None:
+                p["cross"] = {
+                    "ln": cross_g["ln"][pos],
+                    "attn": jax.tree.map(lambda t: t[pos], cross_g["attn"]),
+                }
+                mem = (cross_g["k"][pos], cross_g["v"][pos])
+            x, _ = _apply_position(cfg, pos, p, x, positions, None, comm_mode, memory=mem)
+        return x, None
+
+    stacked = _group_stack(cfg, params)
+    if cfg.encoder_layers:
+        cross_stack = _cross_group_stack(cfg, params, cross_kv)
+        x, _ = jax.lax.scan(jax.checkpoint(group), x, (stacked, cross_stack))
+    else:
+        x, _ = jax.lax.scan(jax.checkpoint(group), x, stacked)
+    return _logits(cfg, params, x)
+
+
+def _group_stack(cfg: ModelConfig, params):
+    """blocks is a tuple of per-position trees stacked [n_groups, ...]; scan
+    needs xs indexed by group → re-expose as {pos: tree} dict."""
+    return {pos: params["blocks"][pos] for pos in range(cfg.period)}
+
+
+def _cross_group_stack(cfg: ModelConfig, params, cross_kv):
+    k, v = cross_kv
+    lp = cfg.period
+    ng = cfg.num_groups
+
+    def regroup(t):
+        return t.reshape(ng, lp, *t.shape[1:])
+
+    return {
+        "ln": regroup(params["cross"]["ln"]),
+        "attn": jax.tree.map(regroup, params["cross"]["attn"]),
+        "k": regroup(k),
+        "v": regroup(v),
+    }
+
+
+def loss_fn(cfg: ModelConfig, params, batch: Dict) -> jax.Array:
+    logits = forward(cfg, params, batch)
+    tokens = batch["tokens"]
+    front = 0
+    if batch.get("frontend") is not None and cfg.family != "audio" and not cfg.encoder_layers:
+        front = batch["frontend"].shape[1]
+    logits_txt = logits[:, front:, :]
+    targets = tokens[:, 1:]
+    preds = logits_txt[:, :-1, :].astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(preds, axis=-1)
+    gold = jnp.take_along_axis(preds, targets[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    mask = batch.get("loss_mask")
+    mask = jnp.ones_like(nll) if mask is None else mask[:, 1:].astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Serving: cache init / prefill / decode
+# ---------------------------------------------------------------------------
+
+def _position_cache(cfg: ModelConfig, pos: int, batch: int, max_len: int):
+    dt = dtype_of(cfg.dtype)
+    mixer = cfg.mixer_at(pos)
+    ng = cfg.num_groups
+    if mixer in ("attn", "attn_local"):
+        kv = cfg.num_kv_heads
+        # local layers never need more than the window
+        length = min(max_len, cfg.local_window) if mixer == "attn_local" else max_len
+        return {
+            "attn": {
+                "k": jnp.zeros((ng, batch, max_len, kv, cfg.hd), dt),
+                "v": jnp.zeros((ng, batch, max_len, kv, cfg.hd), dt),
+                "len": jnp.zeros((ng,), jnp.int32),
+            }
+        }
+    if mixer == "mamba":
+        di = cfg.mamba_expand * cfg.d_model
+        return {
+            "mamba": (
+                jnp.zeros((ng, batch, cfg.ssm_conv - 1, di), dt),
+                jnp.zeros((ng, batch, di, cfg.ssm_state), jnp.float32),
+            )
+        }
+    if mixer == "rwkv":
+        hd = cfg.d_model // cfg.num_heads
+        return {
+            "rwkv": (
+                jnp.zeros((ng, batch, cfg.d_model), dt),
+                jnp.zeros((ng, batch, cfg.num_heads, hd, hd), jnp.float32),
+            )
+        }
+    return {}
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    cache = {f"pos{pos}": _position_cache(cfg, pos, batch, max_len) for pos in range(cfg.period)}
+    if cfg.encoder_layers:
+        enc_len = cfg.frontend_len or max_len
+        kv, dh = cfg.num_kv_heads, cfg.hd
+        cache["memory"] = {
+            "k": jnp.zeros((cfg.num_layers, batch, enc_len, kv, dh), dtype_of(cfg.dtype)),
+            "v": jnp.zeros((cfg.num_layers, batch, enc_len, kv, dh), dtype_of(cfg.dtype)),
+        }
+    return cache
+
+
+def _run_with_cache(cfg: ModelConfig, params, x, positions, cache, comm_mode):
+    stacked = _group_stack(cfg, params)
+    mem = cache.get("memory") if cfg.encoder_layers else None
+    cross_stack = None
+    if cfg.encoder_layers:
+        cross_stack = _cross_group_stack(cfg, params, (mem["k"], mem["v"]))
+
+    def group(x, xs):
+        if cross_stack is not None:
+            gp, gc, cross_g = xs
+        else:
+            (gp, gc), cross_g = xs, None
+        new_gc = {}
+        for pos in range(cfg.period):
+            p = dict(gp[pos])
+            memkv = None
+            if cross_g is not None:
+                p["cross"] = {
+                    "ln": cross_g["ln"][pos],
+                    "attn": jax.tree.map(lambda t: t[pos], cross_g["attn"]),
+                }
+                memkv = (cross_g["k"][pos], cross_g["v"][pos])
+            layer_cache = gc[f"pos{pos}"]
+            x, nc = _apply_position(cfg, pos, p, x, positions, layer_cache, comm_mode, memory=memkv)
+            new_gc[f"pos{pos}"] = nc
+        return x, new_gc
+
+    layer_cache = {f"pos{pos}": cache[f"pos{pos}"] for pos in range(cfg.period)}
+    if cross_stack is not None:
+        x, new_cache = jax.lax.scan(group, x, (stacked, layer_cache, cross_stack))
+    else:
+        x, new_cache = jax.lax.scan(group, x, (stacked, layer_cache))
+    out_cache = dict(new_cache)
+    if cfg.encoder_layers:
+        out_cache["memory"] = cache["memory"]
+    return x, out_cache
+
+
+def prefill(cfg: ModelConfig, params, batch: Dict, max_len: int):
+    tokens = batch["tokens"]
+    b = tokens.shape[0]
+    cache = init_cache(cfg, b, max_len)
+    if cfg.encoder_layers:
+        enc_out = _encode(cfg, params, batch["frontend"])
+        k, v = _memory_kv(cfg, params["cross"], enc_out)
+        cache["memory"] = {"k": k, "v": v}
+    x = _embed(cfg, params, tokens, batch.get("frontend"))
+    s = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    comm = _moe_comm_mode(cfg, b * s)
+    x, cache = _run_with_cache(cfg, params, x, positions, cache, comm)
+    return cache, _logits(cfg, params, x[:, -1:, :])
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens, pos_scalar):
+    """tokens [B, 1]; pos_scalar int32[] current position."""
+    b = tokens.shape[0]
+    x = _embed(cfg, params, tokens, None)
+    positions = jnp.broadcast_to(pos_scalar[None, None], (b, 1))
+    comm = _moe_comm_mode(cfg, b)
+    x, cache = _run_with_cache(cfg, params, x, positions, cache, comm)
+    return _logits(cfg, params, x), cache

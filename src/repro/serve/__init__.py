@@ -1,0 +1,3 @@
+from repro.serve.engine import ServeConfig, BatchedServer
+
+__all__ = ["ServeConfig", "BatchedServer"]

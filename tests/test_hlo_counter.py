@@ -1,0 +1,63 @@
+"""hlo_counter exactness: single-device cases (multi-device in test_distributed)."""
+import jax
+import jax.numpy as jnp
+
+from repro.launch.hlo_counter import analyze
+
+
+def _flops_of(fn, *shapes):
+    args = [jax.ShapeDtypeStruct(s, jnp.float32) for s in shapes]
+    return analyze(jax.jit(fn).lower(*args).compile().as_text())
+
+
+def test_scan_trip_multiplication():
+    def f(x):
+        y, _ = jax.lax.scan(lambda c, _: (c @ c, None), x, None, length=10)
+        return y
+
+    c = _flops_of(f, (512, 512))
+    expect = 10 * 2 * 512**3
+    assert abs(c.flops - expect) / expect < 0.01
+
+
+def test_nested_scan():
+    def f(x):
+        def inner(y, _):
+            return y @ y, None
+
+        def outer(y, _):
+            y, _ = jax.lax.scan(inner, y, None, length=5)
+            return y, None
+
+        y, _ = jax.lax.scan(outer, x, None, length=3)
+        return y
+
+    c = _flops_of(f, (256, 256))
+    expect = 15 * 2 * 256**3
+    assert abs(c.flops - expect) / expect < 0.01
+
+
+def test_batched_dot_flops():
+    def f(x, y):
+        return jnp.einsum("bij,bjk->bik", x, y)
+
+    c = _flops_of(f, (4, 128, 256), (4, 256, 64))
+    expect = 2 * 4 * 128 * 256 * 64
+    assert abs(c.flops - expect) / expect < 0.01
+
+
+def test_dus_stack_write_counted_at_update_size():
+    """A scan writing into a stacked output must charge the slice, not the
+    whole stack, per iteration."""
+    def f(x):
+        def body(c, _):
+            return c + 1.0, c  # ys stacked [32, 256, 256]
+
+        _, ys = jax.lax.scan(body, x, None, length=32)
+        return ys
+
+    c = _flops_of(f, (256, 256))
+    stack = 32 * 256 * 256 * 4
+    # true traffic ≈ 32 × (read c + write slice) ≈ 2-4× the stack bytes;
+    # a result-sized DUS accounting would charge ≈ 32 × stack = 32×.
+    assert c.bytes < 8 * stack, f"{c.bytes} vs stack {stack}"

@@ -1,0 +1,111 @@
+"""Per-kernel validation: Pallas (interpret=True) vs pure-jnp oracles, with
+shape/dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.graph.storage import INVALID
+from repro.kernels.intersect.intersect import multiway_membership_kernel
+from repro.kernels.intersect.ref import multiway_membership_ref
+from repro.kernels.flash_attention.flash_attention import flash_attention_kernel
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.flash_attention.ops import attention_chunked
+from repro.kernels.rwkv6.ref import rwkv6_ref
+from repro.kernels.rwkv6.rwkv6 import rwkv6_kernel
+from repro.kernels.rwkv6.ops import rwkv6_chunked, rwkv6_decode_step
+
+RNG = np.random.default_rng(42)
+
+
+def _sorted_rows(b, e, d, vmax=500):
+    others = np.full((b, e, d), INVALID, np.int32)
+    for i in range(b):
+        for j in range(e):
+            k = RNG.integers(1, d)
+            vals = np.unique(RNG.integers(0, vmax, size=k)).astype(np.int32)
+            others[i, j, : len(vals)] = vals
+    return others
+
+
+@pytest.mark.parametrize("shape", [(8, 1, 128), (16, 2, 256), (8, 3, 384), (24, 4, 128)])
+def test_intersect_kernel_matches_ref(shape):
+    b, e, d = shape
+    others = _sorted_rows(b, e, d)
+    cands = RNG.integers(0, 500, size=(b, d)).astype(np.int32)
+    cands[RNG.random((b, d)) < 0.2] = INVALID
+    ref = multiway_membership_ref(jnp.asarray(cands), jnp.asarray(others))
+    ker = multiway_membership_kernel(jnp.asarray(cands), jnp.asarray(others), interpret=True)
+    assert bool(jnp.all(ref == ker))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "bh,sq,sk,dh,causal,cap",
+    [
+        (2, 128, 128, 64, True, None),
+        (1, 256, 256, 128, True, None),
+        (2, 128, 256, 64, False, None),
+        (1, 128, 128, 64, True, 30.0),
+        (1, 64, 192, 64, True, None),   # decode-like: q is a suffix of kv
+    ],
+)
+def test_flash_attention_matches_ref(bh, sq, sk, dh, causal, cap, dtype):
+    q = jnp.asarray(RNG.standard_normal((bh, sq, dh)), dtype)
+    k = jnp.asarray(RNG.standard_normal((bh, sk, dh)), dtype)
+    v = jnp.asarray(RNG.standard_normal((bh, sk, dh)), dtype)
+    ref = attention_ref(q, k, v, causal=causal, softcap=cap).astype(jnp.float32)
+    ker = flash_attention_kernel(
+        q, k, v, causal=causal, softcap=cap, tq=64, tk=64, interpret=True
+    ).astype(jnp.float32)
+    chk = attention_chunked(q, k, v, causal=causal, softcap=cap, chunk=96).astype(jnp.float32)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    assert float(jnp.max(jnp.abs(ref - ker))) < tol
+    assert float(jnp.max(jnp.abs(ref - chk))) < tol
+
+
+@pytest.mark.parametrize("bh,t,kd,vd,chunk", [(2, 64, 32, 32, 16), (2, 128, 64, 64, 32), (1, 96, 64, 64, 32)])
+def test_rwkv6_kernel_matches_ref(bh, t, kd, vd, chunk):
+    r = jnp.asarray(RNG.standard_normal((bh, t, kd)) * 0.5, jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((bh, t, kd)) * 0.5, jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((bh, t, vd)), jnp.float32)
+    w = jnp.asarray(RNG.uniform(0.6, 0.999, (bh, t, kd)), jnp.float32)
+    u = jnp.asarray(RNG.standard_normal((bh, kd)) * 0.3, jnp.float32)
+    ref = rwkv6_ref(r, k, v, w, u)
+    ker = rwkv6_kernel(r, k, v, w, u, chunk=chunk, interpret=True)
+    chk = rwkv6_chunked(r, k, v, w, u, chunk=chunk)
+    assert float(jnp.max(jnp.abs(ref - ker))) < 1e-3
+    assert float(jnp.max(jnp.abs(ref - chk))) < 1e-3
+
+
+def test_rwkv6_decode_matches_ref():
+    bh, t, kd, vd = 2, 12, 16, 16
+    r = jnp.asarray(RNG.standard_normal((bh, t, kd)) * 0.5, jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((bh, t, kd)) * 0.5, jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((bh, t, vd)), jnp.float32)
+    w = jnp.asarray(RNG.uniform(0.6, 0.999, (bh, t, kd)), jnp.float32)
+    u = jnp.asarray(RNG.standard_normal((bh, kd)) * 0.3, jnp.float32)
+    ref = rwkv6_ref(r, k, v, w, u)
+    S = jnp.zeros((bh, kd, vd))
+    outs = []
+    for i in range(t):
+        S, o = rwkv6_decode_step(S, r[:, i], k[:, i], v[:, i], w[:, i], u)
+        outs.append(o)
+    assert float(jnp.max(jnp.abs(jnp.stack(outs, 1) - ref))) < 1e-4
+
+
+def test_rwkv6_chunked_state_continuation():
+    """Chunked scan's returned state continues exactly into decode steps."""
+    bh, t, kd, vd = 1, 32, 16, 16
+    r = jnp.asarray(RNG.standard_normal((bh, t + 4, kd)) * 0.5, jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((bh, t + 4, kd)) * 0.5, jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((bh, t + 4, vd)), jnp.float32)
+    w = jnp.asarray(RNG.uniform(0.6, 0.999, (bh, t + 4, kd)), jnp.float32)
+    u = jnp.asarray(RNG.standard_normal((bh, kd)) * 0.3, jnp.float32)
+    full = rwkv6_ref(r, k, v, w, u)
+    _, S = rwkv6_chunked(r[:, :t], k[:, :t], v[:, :t], w[:, :t], u, chunk=8, return_state=True)
+    outs = []
+    for i in range(t, t + 4):
+        S, o = rwkv6_decode_step(S, r[:, i], k[:, i], v[:, i], w[:, i], u)
+        outs.append(o)
+    assert float(jnp.max(jnp.abs(jnp.stack(outs, 1) - full[:, t:]))) < 1e-3

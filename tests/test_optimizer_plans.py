@@ -1,0 +1,129 @@
+"""Optimiser + plan-space tests: Table-2 constraints, Eq. 3, translation."""
+import pytest
+
+from repro.core import query as Q
+from repro.core.cost import GraphStats
+from repro.core.dataflow import translate
+from repro.core.optimizer import optimal_plan
+from repro.core.plan import (
+    PLAN_SPACES,
+    is_complete_star_join,
+    pull_hash_root,
+    star_of,
+)
+
+STATS = GraphStats.synthetic(1 << 14, 8.0)
+
+
+def _walk(node, fn):
+    fn(node)
+    if not node.is_leaf:
+        _walk(node.left, fn)
+        _walk(node.right, fn)
+
+
+@pytest.mark.parametrize("qname", ["q1", "q2", "q3", "q6", "q7", "q8"])
+def test_huge_plans_cover_query(qname):
+    q = Q.PAPER_QUERIES[qname]
+    plan = optimal_plan(q, STATS, 8, "huge")
+    assert plan.root.edges == q.edges
+    flow = translate(plan)
+    assert set(flow.ops[-1].schema) == set(range(q.num_vertices))
+
+
+def test_bigjoin_space_is_wco_push_leftdeep():
+    q = Q.PAPER_QUERIES["q3"]
+    plan = optimal_plan(q, STATS, 8, "bigjoin")
+
+    def check(node):
+        if not node.is_leaf:
+            assert node.algo == "wco" and node.comm == "push"
+            assert is_complete_star_join(node.left.edges, node.right.edges) is not None
+            assert len(node.right.edges) >= 1
+
+    _walk(plan.root, check)
+
+
+def test_benu_space_is_wco_pull():
+    plan = optimal_plan(Q.PAPER_QUERIES["q1"], STATS, 8, "benu")
+
+    def check(node):
+        if not node.is_leaf:
+            assert node.algo == "wco" and node.comm == "pull"
+
+    _walk(plan.root, check)
+
+
+def test_starjoin_space_is_hash_push():
+    plan = optimal_plan(Q.PAPER_QUERIES["q1"], STATS, 8, "starjoin")
+
+    def check(node):
+        if not node.is_leaf:
+            assert node.algo == "hash" and node.comm == "push"
+            assert star_of(node.right.edges) is not None  # left-deep: rhs unit
+
+    _walk(plan.root, check)
+
+
+def test_figure_1b_4clique_is_extend_chain():
+    """Paper Example 3.1 / Fig 1b: the optimal 4-clique plan is an edge scan
+    followed by two complete-star-join extensions."""
+    plan = optimal_plan(Q.clique(4), STATS, 8, "huge")
+    flow = translate(plan)
+    kinds = [op.kind for op in flow.ops]
+    assert kinds == ["scan", "extend", "extend", "sink"]
+    assert flow.ops[1].ext and flow.ops[2].ext
+    assert len(flow.ops[2].ext) == 3  # final vertex intersects 3 neighbours
+
+
+def test_figure_1d_5path_uses_push_join():
+    """Paper Fig 1d: the 5-path plan joins two 3-paths with a pushing hash
+    join — both comm modes in one plan (the hybrid claim)."""
+    plan = optimal_plan(Q.path(5), STATS, 8, "huge")
+    algos = []
+
+    def collect(node):
+        if not node.is_leaf:
+            algos.append((node.algo, node.comm))
+
+    _walk(plan.root, collect)
+    assert ("hash", "push") in algos
+
+
+def test_pull_cost_caps_at_graph_size():
+    """Remark 3.1: with enormous intermediate results the optimiser must
+    prefer pull (k·|E_G|) over pushing them."""
+    big_stats = GraphStats.synthetic(1 << 12, 40.0)  # dense → huge wedges
+    plan = optimal_plan(Q.PAPER_QUERIES["q1"], big_stats, 4, "huge")
+    comms = []
+
+    def collect(node):
+        if not node.is_leaf:
+            comms.append(node.comm)
+
+    _walk(plan.root, collect)
+    assert "pull" in comms
+
+
+def test_symmetry_break_kills_automorphisms():
+    for q in (Q.triangle(), Q.square(), Q.clique(4), Q.path(5)):
+        conds = Q.symmetry_break(q)
+        auts = q.automorphisms()
+        # conditions must leave exactly one representative per automorphism
+        # class: the identity must satisfy them under some relabeling; check
+        # that applying conds as a filter over all automorphism images of a
+        # canonical tuple keeps exactly one.
+        base = tuple(range(q.num_vertices))
+        kept = 0
+        for perm in auts:
+            ok = all(perm[a] < perm[b] for a, b in conds)
+            kept += ok
+        assert kept == 1, (q.name, kept)
+
+
+def test_complete_star_join_detection():
+    left = frozenset({(0, 1)})
+    right = frozenset({(0, 2), (1, 2)})  # star root 2, leaves {0,1} ⊆ V(left)
+    assert is_complete_star_join(left, right) == (2, frozenset({0, 1}))
+    assert pull_hash_root(left, frozenset({(0, 2), (0, 3)})) == (0, frozenset({2, 3}))
+    assert is_complete_star_join(left, frozenset({(0, 2), (0, 3)})) is None

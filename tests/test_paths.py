@@ -1,0 +1,43 @@
+"""Paper §6 applications: path queries on the HUGE operators vs networkx."""
+import networkx as nx
+import pytest
+
+from repro.core.paths import hop_constrained_paths, shortest_path_length
+from repro.graph import erdos_renyi, grid_graph
+from repro.graph.storage import to_networkx
+
+
+@pytest.mark.parametrize("gname", ["er", "grid"])
+def test_shortest_path_matches_networkx(gname):
+    graph = erdos_renyi(120, 5.0, seed=3) if gname == "er" else grid_graph(8, 8)
+    g = to_networkx(graph)
+    pairs = [(0, graph.num_vertices - 1), (1, graph.num_vertices // 2), (2, 7)]
+    for s, t in pairs:
+        try:
+            want = nx.shortest_path_length(g, s, t)
+        except nx.NetworkXNoPath:
+            want = None
+        got = shortest_path_length(graph, s, t)
+        assert got == want, (s, t, got, want)
+
+
+def test_hop_constrained_paths_match_bruteforce():
+    graph = erdos_renyi(40, 4.0, seed=5)
+    g = to_networkx(graph)
+    s, t, hops = 0, 5, 4
+    want = {
+        tuple(p) for p in nx.all_simple_paths(g, s, t, cutoff=hops) if len(p) == hops + 1
+    }
+    got = set(hop_constrained_paths(graph, s, t, hops))
+    assert got == want
+
+
+def test_hop_constrained_odd_hops():
+    graph = grid_graph(5, 5)
+    g = to_networkx(graph)
+    s, t, hops = 0, 6, 3
+    want = {
+        tuple(p) for p in nx.all_simple_paths(g, s, t, cutoff=hops) if len(p) == hops + 1
+    }
+    got = set(hop_constrained_paths(graph, s, t, hops))
+    assert got == want
