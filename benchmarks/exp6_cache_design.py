@@ -2,7 +2,7 @@
 
 The paper compares LRBU vs copy/lock variants in wall time; locks don't exist
 in a JAX SPMD program (the two-stage execution *is* the lock-freedom — see
-DESIGN.md), so the comparable axis here is the replacement policy under the
+DESIGN.md §Cache), so the comparable axis here is the replacement policy under the
 same two-stage execution: LRBU (epoch-sealed) vs classic LRU vs direct-mapped.
 Measured as hit rate / pulled bytes at equal capacity.
 """

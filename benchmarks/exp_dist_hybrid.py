@@ -1,0 +1,103 @@
+"""Distributed Table-1: communication modes with *real* collectives.
+
+table1_comm_modes.py reproduces the paper's communication-mode comparison
+with simulated byte accounting on the single-process engine; this suite runs
+the same comparison on the shard_map SPMD engine (distributed.py), where the
+bytes are what ``all_to_all`` collectives actually moved:
+
+  pull-only  BENU space: pure extend/verify chains, GetNbrs fetch traffic;
+  push-only  SEED space: hash/push plans — every join is a distributed
+             PUSH-JOIN hash shuffle;
+  hybrid     HUGE space: the optimiser mixes PULL-EXTEND and PUSH-JOIN
+             per Eq. 3 (the paper's headline claim).
+
+Per row we report count, pull bytes (fetch-stage remote vids × (D_pad+2)·4),
+push bytes (join-shuffle rows crossing shards × row width), steal bytes, and
+the Eq.-3 prediction from hybrid_comm.enum_join_mode for context.
+
+XLA fixes the host device count at import, so the measurement runs in a
+fresh interpreter with ``--xla_force_host_platform_device_count=8`` (same
+mechanism as tests/test_distributed.py); invoke via
+``PYTHONPATH=src python -m benchmarks.run exp_dist_hybrid`` (EXPERIMENTS.md
+§Distributed-hybrid).
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+SHARDS = 8
+QUERIES = ("q1", "q2")  # q7+ explode at CI scale; run them via launch/enumerate
+SYSTEMS = (("pull-only", "benu"), ("push-only", "seed"), ("hybrid", "huge"))
+
+
+def inner() -> None:
+    import time
+
+    import jax
+
+    from benchmarks.common import emit
+    from repro.core import query as Q
+    from repro.core.cost import GraphStats
+    from repro.core.distributed import DistConfig, DistributedEngine
+    from repro.core.hybrid_comm import enum_join_mode
+    from repro.graph import powerlaw_graph
+
+    mesh = jax.make_mesh((SHARDS,), ("shards",))
+    graph = powerlaw_graph(1 << 9, 6.0, seed=7)
+    stats = GraphStats.from_graph(graph)
+    eng = DistributedEngine(
+        graph, mesh, DistConfig(batch_size=256, queue_capacity=1 << 15)
+    )
+    for qname in QUERIES:
+        q = Q.PAPER_QUERIES[qname]
+        counts = {}
+        for system, space in SYSTEMS:
+            t0 = time.perf_counter()
+            count, s = eng.run(q, space=space)
+            wall = time.perf_counter() - t0
+            counts[system] = count
+            assert s["engine"] == "shard_map"
+            emit(
+                f"exp_dist_hybrid/{system}/{qname}",
+                wall * 1e6,
+                f"count={count};joins={s['joins']};a2a={s['a2a_calls']};"
+                f"pull={s['pulled_bytes'] / 1e6:.3f}MB;"
+                f"push={s['shuffle_bytes'] / 1e6:.3f}MB;"
+                f"steal={s['steal_bytes'] / 1e6:.3f}MB",
+            )
+        assert len(set(counts.values())) == 1, f"{qname}: {counts}"
+        # Eq.-3 prediction for this query's top-level join volume: use the
+        # total match count as the intermediate-result proxy (CI scale).
+        dec = enum_join_mode(
+            left_rows=max(counts["hybrid"], 1), right_rows=max(counts["hybrid"], 1),
+            width_left=q.num_vertices, width_right=q.num_vertices,
+            graph_edges=stats.num_directed_edges / 2, machines=SHARDS,
+        )
+        emit(
+            f"exp_dist_hybrid/eq3/{qname}", 0.0,
+            f"mode={dec.mode};push={dec.push_bytes / 1e6:.3f}MB;"
+            f"pull={dec.pull_bytes / 1e6:.3f}MB",
+        )
+
+
+def main() -> None:
+    """Relay the measurement from a fresh interpreter with 8 host devices."""
+    env = dict(
+        os.environ,
+        PYTHONPATH="src" + os.pathsep + os.environ.get("PYTHONPATH", ""),
+        XLA_FLAGS="--xla_force_host_platform_device_count=8",
+    )
+    r = subprocess.run(
+        [sys.executable, "-c",
+         "from benchmarks.exp_dist_hybrid import inner; inner()"],
+        env=env, capture_output=True, text=True, timeout=1200,
+    )
+    sys.stdout.write(r.stdout)
+    if r.returncode != 0:
+        raise RuntimeError(f"exp_dist_hybrid subprocess failed:\n{r.stderr[-3000:]}")
+
+
+if __name__ == "__main__":
+    main()

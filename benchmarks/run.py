@@ -18,6 +18,7 @@ from benchmarks import (
     exp7_scheduling,
     exp9_plans,
     exp10_scaling,
+    exp_dist_hybrid,
     table1_comm_modes,
     table4_throughput,
 )
@@ -31,6 +32,7 @@ SUITES = {
     "exp7": exp7_scheduling.main,
     "exp9": exp9_plans.main,
     "exp10": exp10_scaling.main,
+    "exp_dist_hybrid": exp_dist_hybrid.main,
     "table4": table4_throughput.main,
 }
 

@@ -3,7 +3,8 @@
 Plan layer:   query, plan, cost, optimizer (Alg. 1), dataflow (Alg. 2)
 Engine layer: operators, cache (LRBU, Alg. 3/4), scheduler (Alg. 5),
               engine (single-process + comm accounting),
-              distributed (shard_map SPMD engine)
+              distributed (shard_map SPMD engine — full scan/extend/verify/
+              join DAGs with real collectives, incl. the PUSH-JOIN shuffle)
 LM bridges:   hybrid_comm (Eq. 3 for MoE/vocab joins),
               adaptive_schedule (Alg. 5 for training microbatches)
 Applications: paths (paper §6: shortest / hop-constrained paths)

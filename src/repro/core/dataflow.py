@@ -72,12 +72,35 @@ class OpDesc:
 
 @dataclasses.dataclass
 class Dataflow:
+    """Operator DAG in topological emission order: ``ops[i].inputs`` are always
+    indices < i, so any scheduler that walks the list front-to-back sees
+    producers before consumers (what the generalised AdaptiveScheduler and
+    both engines rely on)."""
+
     ops: List[OpDesc]
     query_name: str = ""
 
     @property
     def sink_index(self) -> int:
         return len(self.ops) - 1
+
+    def ancestors(self, i: int) -> Tuple[int, ...]:
+        """All transitive producers of op ``i`` (excluding ``i``), ascending.
+
+        A PUSH-JOIN's barrier is expressed through this set: the join may only
+        probe once every ancestor of its *left* input has drained (DESIGN.md
+        §Shuffle-join)."""
+        seen: set = set()
+        stack = list(self.ops[i].inputs)
+        while stack:
+            j = stack.pop()
+            if j not in seen:
+                seen.add(j)
+                stack.extend(self.ops[j].inputs)
+        return tuple(sorted(seen))
+
+    def num_joins(self) -> int:
+        return sum(1 for op in self.ops if op.kind == "join")
 
     def describe(self) -> str:
         lines = []
@@ -282,6 +305,7 @@ class _Translator:
         return self._emit(
             OpDesc(
                 kind="join",
+                comm="push",
                 schema=out_schema,
                 inputs=(li, ri),
                 key_left=tuple(ls.index(k) for k in key),

@@ -1,9 +1,9 @@
-"""Distributed HUGE engine: shard_map SPMD execution of PULL-EXTEND chains.
+"""Distributed HUGE engine: shard_map SPMD execution of arbitrary plan DAGs.
 
 This is the real-collective counterpart of engine.py: the graph is hash-
 partitioned over the mesh axis ``shards`` (paper §2), partial matches live on
-their producing shard, and each PULL-EXTEND executes the paper's two-stage
-strategy with actual communication:
+their producing shard, and every operator of the translated dataflow — SCAN,
+PULL-EXTEND, VERIFY, PUSH-JOIN, SINK — executes with actual communication:
 
   fetch stage     dedup the batch's remote vertices (merged-RPC aggregation),
                   route requests to their owners with an ``all_to_all``,
@@ -11,16 +11,24 @@ strategy with actual communication:
                   — the GetNbrs RPC as a dense collective;
   intersect stage read-only: Eq. 2 membership over local partition + the
                   fetched table (zero-copy in the paper's sense: pure gather);
-  stealing        each batch's results are re-spread evenly with one more
-                  ``all_to_all`` (proactive inter-machine work stealing, §5.3
-                  — see DESIGN.md on why SPMD makes stealing deterministic).
+  shuffle join    PUSH-JOIN hash-partitions *both* inputs by join key with an
+                  ``all_to_all`` (the paper's shuffle of R(q'_l), R(q'_r));
+                  matching keys co-locate, so the probe itself is local —
+                  DESIGN.md §Shuffle-join;
+  stealing        each extend batch's results are re-spread evenly with one
+                  more ``all_to_all`` (proactive inter-machine work stealing,
+                  §5.3 — see DESIGN.md §SPMD-work-stealing on why SPMD makes
+                  stealing deterministic).
 
-Scope: extend/verify-chain dataflows (wco plans — the paper's core path).
-Plans with PUSH-JOIN barriers run on the single-process engine (the
-distributed shuffle join is the same hash-a2a machinery; DESIGN.md).
+Scope: any optimiser plan — scan → {extend, verify, join} DAGs, driven by the
+generalised BFS/DFS-adaptive scheduler (scheduler.py) over the dataflow's
+topological order. PUSH-JOIN is a barrier operator: it shuffle-buffers either
+input whenever rows are available, but only probes once every ancestor of its
+buffered (left) branch has drained.
 
-Memory bound: every queue is a preallocated [P, CAP, K] device array — the
-paper's Theorem 5.4 bound is structural.
+Memory bound: every queue — operator output queues *and* join side buffers —
+is a preallocated [P, CAP, K] device array, so the paper's Theorem 5.4 bound
+stays structural (a compile-time constant, not a runtime promise).
 """
 from __future__ import annotations
 
@@ -37,7 +45,9 @@ from repro.core import operators as ops_mod
 from repro.core.dataflow import Dataflow, OpDesc, translate
 from repro.core.optimizer import optimal_plan
 from repro.core.cost import GraphStats
+from repro.core.plan import ExecutionPlan
 from repro.core.query import QueryGraph
+from repro.core.scheduler import AdaptiveScheduler
 from repro.graph.partition import partition_graph
 from repro.graph.storage import Graph, INVALID
 
@@ -46,22 +56,290 @@ from repro.graph.storage import Graph, INVALID
 class DistConfig:
     batch_size: int = 256
     queue_capacity: int = 1 << 16
+    join_buffer_capacity: int = 1 << 17  # rows per join side buffer per shard
+    join_out_capacity: int = 1 << 17     # worst-case rows per probe step
     axis: str = "shards"
-    rebalance: bool = True           # inter-machine work stealing
+    rebalance: bool = True               # inter-machine work stealing
 
 
-def wco_chain(flow: Dataflow) -> Optional[List[OpDesc]]:
-    """The op chain if the dataflow is a pure scan→(extend|verify)*→sink line."""
-    ops = flow.ops
-    if ops[0].kind != "scan" or ops[-1].kind != "sink":
+class _DQueue:
+    """A distributed device queue: ``buf[P, cap+slack, K]`` + counts ``n[P]``.
+
+    ``capacity`` is the logical fill level the scheduler gates on; ``slack``
+    absorbs one worst-case batch beyond it (Lemma 5.2 overflow allowance).
+    The host caches ``max(n)`` so scheduling decisions don't re-sync."""
+
+    def __init__(self, eng: "DistributedEngine", width: int, slack: int,
+                 capacity: Optional[int] = None):
+        cap = eng.cfg.queue_capacity if capacity is None else capacity
+        self.capacity = cap + slack  # physical rows, engine.DeviceQueue-style
+        self.width = width
+        self.buf = jax.device_put(
+            jnp.full((eng.p, cap + slack, width), INVALID, jnp.int32), eng.sh(3)
+        )
+        self.n = jax.device_put(jnp.zeros((eng.p,), jnp.int32), eng.sh(1))
+        self._eng = eng
+        self._max = 0
+        self._dirty = False
+
+    def set(self, buf: jax.Array, n: jax.Array) -> None:
+        self.buf, self.n = buf, n
+        self._dirty = True
+
+    def set_n(self, n: jax.Array) -> None:
+        self.n = n
+        self._dirty = True
+
+    @property
+    def max_n(self) -> int:
+        if self._dirty:
+            self._max = int(jnp.max(self.n))
+            self._dirty = False
+        return self._max
+
+    def total(self) -> int:
+        return int(jnp.sum(self.n))
+
+    def free(self) -> int:
+        """Physical free rows; gate ``free() >= worst_case_batch`` before
+        running a producer (the Lemma 5.2 slack invariant)."""
+        return self.capacity - self.max_n
+
+    def drain(self) -> None:
+        self.n = jax.device_put(
+            jnp.zeros((self._eng.p,), jnp.int32), self._eng.sh(1)
+        )
+        self._max = 0
+        self._dirty = False
+
+
+# ---------------------------------------------------------------------------
+# Operator runtimes (host-side wrappers over jitted shard_map step programs,
+# implementing scheduler.OperatorRuntime)
+# ---------------------------------------------------------------------------
+
+class _DScanRT:
+    def __init__(self, eng: "DistributedEngine", desc: OpDesc, out_q: _DQueue):
+        self.e, self.desc, self.out_q = eng, desc, out_q
+        self.label = desc.label()
+        self.cursor = jax.device_put(jnp.zeros((eng.p,), jnp.int32), eng.sh(1))
+        self.rounds_done = 0
+        self.step = eng._build_scan_step(desc)
+
+    def has_input(self) -> bool:
+        return self.rounds_done < self.e.scan_rounds
+
+    def internal_pending(self) -> bool:
+        return self.has_input()
+
+    def output_free(self) -> int:
+        return self.out_q.free()
+
+    def required_slack(self) -> int:
+        return self.e.cfg.batch_size
+
+    def run_one(self) -> None:
+        e = self.e
+        buf, n = self.step(
+            e.src, e.dst, e.scan_totals, self.cursor, self.out_q.buf, self.out_q.n
+        )
+        self.out_q.set(buf, n)
+        self.cursor = self.cursor + e.cfg.batch_size
+        self.rounds_done += 1
+        e.stats["rounds"] += 1
+
+
+class _DExtendRT:
+    """PULL-EXTEND / VERIFY: fetch (2 a2a) + intersect + optional steal (2 a2a)."""
+
+    def __init__(self, eng: "DistributedEngine", desc: OpDesc, in_q: _DQueue,
+                 out_q: _DQueue):
+        self.e, self.desc, self.in_q, self.out_q = eng, desc, in_q, out_q
+        self.label = desc.label()
+        self.is_verify = desc.kind == "verify"
+        self.step = eng._build_extend_step(desc, self.is_verify)
+        # The steal all_to_all is statically elided when a batch's worst-case
+        # output can't be split P ways (mirrors the out_w >= p trace guard).
+        self.steal_traced = (
+            not self.is_verify
+            and eng.cfg.rebalance
+            and eng.cfg.batch_size * eng.d_pad >= eng.p
+        )
+
+    def has_input(self) -> bool:
+        return self.in_q.max_n > 0
+
+    def internal_pending(self) -> bool:
+        return False
+
+    def output_free(self) -> int:
+        return self.out_q.free()
+
+    def required_slack(self) -> int:
+        b = self.e.cfg.batch_size
+        return b if self.is_verify else b * self.e.d_pad
+
+    def run_one(self) -> None:
+        e = self.e
+        rem, buf, n, comm = self.step(
+            e.adj, self.in_q.buf, self.in_q.n, self.out_q.buf, self.out_q.n
+        )
+        self.in_q.set_n(rem)
+        self.out_q.set(buf, n)
+        fetched, stolen = (int(x) for x in np.asarray(jnp.sum(comm, axis=0)))
+        e.stats["rounds"] += 1
+        e.stats["a2a_calls"] += 2 + (2 if self.steal_traced else 0)
+        e.stats["pulled_vids"] += fetched
+        e.stats["pulled_bytes"] += fetched * (e.d_pad + 2) * 4
+        e.stats["steal_rows"] += stolen
+        e.stats["steal_bytes"] += stolen * self.out_q.width * 4
+
+
+class _DJoinRT:
+    """PUSH-JOIN: hash-shuffle both inputs by join key (all_to_all), buffer
+    them in preallocated [P, CAP, K] side buffers, and — once the left branch
+    has drained (the §5.4 barrier) — sort the left side once and stream the
+    right side through local probes."""
+
+    def __init__(self, eng: "DistributedEngine", desc: OpDesc,
+                 left_q: _DQueue, right_q: _DQueue, out_q: _DQueue):
+        self.e, self.desc = eng, desc
+        self.left_q, self.right_q, self.out_q = left_q, right_q, out_q
+        self.label = desc.label()
+        jcap = eng.cfg.join_buffer_capacity
+        shuffle_slack = eng.p * eng.cfg.batch_size
+        self.lbuf = _DQueue(eng, left_q.width, shuffle_slack, capacity=jcap)
+        self.rbuf = _DQueue(eng, right_q.width, shuffle_slack, capacity=jcap)
+        self.lshuf = eng._build_shuffle_step(desc.key_left[0])
+        self.rshuf = eng._build_shuffle_step(desc.key_right[0])
+        self.prep = eng._build_prepare_step(desc.key_left)
+        self.probe = eng._build_probe_step(desc)
+        self._sorted: Optional[Tuple[jax.Array, jax.Array]] = None
+        # installed by the engine: () -> bool, True once every ancestor of the
+        # left input (and the left queue itself) has drained
+        self.left_branch_done = lambda: True
+
+    # -- scheduling interface ------------------------------------------------
+    #
+    # A join has three micro-operations with different output targets and
+    # worst-case sizes (shuffle-left → lbuf, shuffle-right → rbuf, probe →
+    # out_q), so capacity gating is internal: ``has_input`` reports pending
+    # work, ``_runnable`` picks the next action that both has input *and*
+    # fits, and output_free/required_slack degenerate to a 0/1 gate on it.
+    # If work is pending but nothing fits (a genuinely overflowing side
+    # buffer), the scheduler's stall guard raises — same contract as the
+    # single-process queue-overflow error.
+
+    def has_input(self) -> bool:
+        return (
+            self.left_q.max_n > 0
+            or self.right_q.max_n > 0
+            or (self.rbuf.max_n > 0 and self.left_branch_done())
+        )
+
+    def internal_pending(self) -> bool:
+        # Rows shuffled but not yet probed keep this join's branch alive.
+        return self.rbuf.max_n > 0
+
+    def _runnable(self) -> Optional[str]:
+        shuffle_slack = self.e.p * self.e.cfg.batch_size
+        if self.left_q.max_n > 0 and self.lbuf.free() >= shuffle_slack:
+            return "lshuf"
+        # Probing precedes shuffle-right so the probe drains rbuf and unblocks
+        # further shuffles; it never competes with shuffle-left because the
+        # barrier implies the left queue has drained.
+        if (
+            self.rbuf.max_n > 0
+            and self.left_branch_done()
+            and self.out_q.free() >= self.e.cfg.join_out_capacity
+        ):
+            return "probe"
+        if self.right_q.max_n > 0 and self.rbuf.free() >= shuffle_slack:
+            return "rshuf"
         return None
-    for op in ops[1:-1]:
-        if op.kind not in ("extend", "verify"):
-            return None
-    return list(ops)
+
+    def output_free(self) -> int:
+        return 1 if self._runnable() is not None else 0
+
+    def required_slack(self) -> int:
+        return 1
+
+    # -- execution -----------------------------------------------------------
+
+    def _shuffle(self, step, in_q: _DQueue, side: _DQueue) -> None:
+        e = self.e
+        rem, buf, n, moved = step(in_q.buf, in_q.n, side.buf, side.n)
+        in_q.set_n(rem)
+        side.set(buf, n)
+        assert self._sorted is None or side is self.rbuf, (
+            "left side grew after the join barrier released"
+        )
+        moved_rows = int(jnp.sum(moved))
+        e.stats["rounds"] += 1
+        e.stats["a2a_calls"] += 1
+        e.stats["shuffle_rows"] += moved_rows
+        e.stats["shuffle_bytes"] += moved_rows * side.width * 4
+
+    def run_one(self) -> None:
+        e = self.e
+        a = self._runnable()
+        if a == "lshuf":
+            self._shuffle(self.lshuf, self.left_q, self.lbuf)
+            return
+        if a == "rshuf":
+            self._shuffle(self.rshuf, self.right_q, self.rbuf)
+            return
+        if self._sorted is None:
+            # Barrier released: external merge sort of the buffered branch.
+            self._sorted = self.prep(self.lbuf.buf, self.lbuf.n)
+        out_buf, out_n, rem, overflow = self.probe(
+            self._sorted[0], self._sorted[1], self.rbuf.buf, self.rbuf.n,
+            self.out_q.buf, self.out_q.n,
+        )
+        if bool(jnp.any(overflow)):
+            raise RuntimeError(
+                "distributed PUSH-JOIN output overflow: raise join_out_capacity "
+                "or lower batch_size (results would be lost)"
+            )
+        self.rbuf.set_n(rem)
+        self.out_q.set(out_buf, out_n)
+        e.stats["rounds"] += 1
+        e.stats["probe_batches"] += 1
+
+
+class _DSinkRT:
+    def __init__(self, eng: "DistributedEngine", desc: OpDesc, in_q: _DQueue):
+        self.e, self.desc, self.in_q = eng, desc, in_q
+        self.label = desc.label()
+        self.count = 0
+
+    def has_input(self) -> bool:
+        return self.in_q.max_n > 0
+
+    def internal_pending(self) -> bool:
+        return False
+
+    def output_free(self) -> int:
+        return 1 << 62
+
+    def required_slack(self) -> int:
+        return 0
+
+    def run_one(self) -> None:
+        self.count += self.in_q.total()
+        self.in_q.drain()
+        self.e.stats["rounds"] += 1
 
 
 class DistributedEngine:
+    """SPMD execution of translated dataflows over a ``shard_map`` mesh axis.
+
+    Runs *any* optimiser plan — including hybrid plans mixing PULL-EXTEND and
+    PUSH-JOIN — entirely with device collectives; there is no single-process
+    fallback. ``stats["engine"]`` is always ``"shard_map"`` and
+    ``stats["joins"]`` counts the PUSH-JOINs executed distributedly.
+    """
+
     def __init__(self, graph: Graph, mesh: Mesh, cfg: DistConfig | None = None):
         self.cfg = cfg or DistConfig()
         self.mesh = mesh
@@ -94,15 +372,25 @@ class DistributedEngine:
         self.src = jax.device_put(jnp.asarray(src), self.sh(2))
         self.dst = jax.device_put(jnp.asarray(dst), self.sh(2))
         self.scan_totals = jax.device_put(jnp.asarray(totals), self.sh(1))
-        self.stats: Dict[str, float] = {}
+        self.scan_rounds = max_e // b
+        self.stats: Dict[str, object] = {}
 
     # ------------------------------------------------------------------
     # shard-local pieces (inside shard_map; no leading P dim)
     # ------------------------------------------------------------------
 
+    def _offshard_count(self, mask):
+        """Number of True entries in a per-destination ``[P, ...]`` mask whose
+        destination is not this shard — the cross-network share of an
+        all_to_all, for traffic accounting."""
+        me = jax.lax.axis_index(self.axis)
+        dest = jnp.arange(self.p).reshape((self.p,) + (1,) * (mask.ndim - 1))
+        return jnp.sum((mask & (dest != me)).astype(jnp.int32))
+
     def _fetch(self, adj, rows, valid_rows, ext):
         """Fetch stage: dedup needed vids, owner-routed exchange, return a
-        sorted lookup table (vids, adjacency rows)."""
+        sorted lookup table (vids, adjacency rows) plus the number of requests
+        this shard routed to *other* shards (pull-traffic accounting)."""
         p, axis = self.p, self.axis
         vids = rows[:, list(ext)].reshape(-1)
         ok = (
@@ -128,6 +416,7 @@ class DistributedEngine:
         reqs = jnp.full((p, r_cap), INVALID, jnp.int32).at[
             jnp.where(uniq, o_s, p), jnp.where(uniq, slot, r_cap)
         ].set(v_s, mode="drop")
+        remote = self._offshard_count(reqs != INVALID)
         got = jax.lax.all_to_all(reqs, axis, split_axis=0, concat_axis=0, tiled=True)
         lid = jnp.clip(jnp.where(got != INVALID, got // p, 0), 0, adj.shape[0] - 1)
         served = jnp.take(adj, lid.reshape(-1), axis=0).reshape(p, r_cap, -1)
@@ -135,8 +424,10 @@ class DistributedEngine:
         back = jax.lax.all_to_all(served, axis, split_axis=0, concat_axis=0, tiled=True)
         back_vids = reqs.reshape(-1)
         order = jnp.argsort(back_vids)
-        return jnp.take(back_vids, order), jnp.take(
-            back.reshape(-1, adj.shape[-1]), order, axis=0
+        return (
+            jnp.take(back_vids, order),
+            jnp.take(back.reshape(-1, adj.shape[-1]), order, axis=0),
+            remote,
         )
 
     def _lookup(self, table_vids, table_rows, adj, vids):
@@ -191,7 +482,8 @@ class DistributedEngine:
             adj = adj3[0]
             rows, take, rem = ops_mod.queue_pop(in_buf[0], in_n[0], b)
             valid = jnp.arange(b) < take
-            tv, tr = self._fetch(adj, rows, valid, ext)
+            tv, tr, remote = self._fetch(adj, rows, valid, ext)
+            stolen = jnp.zeros((), jnp.int32)
             k = rows.shape[1]
             if is_verify:
                 target = rows[:, vpos : vpos + 1]
@@ -221,80 +513,158 @@ class DistributedEngine:
                 new_rows, m = ops_mod.compact(expanded, mask.reshape(-1), b * d_pad)
                 out_w = b * d_pad
                 k = k + 1
-            if rebalance and out_w >= p:
+            if rebalance and not is_verify and out_w >= p:
                 share = out_w // p
                 chunks = new_rows[: share * p].reshape(p, share, k)
                 cvalid = (jnp.arange(share * p) < m).reshape(p, share)
+                stolen = self._offshard_count(cvalid)
                 got = jax.lax.all_to_all(chunks, self.axis, split_axis=0, concat_axis=0, tiled=True)
                 gvalid = jax.lax.all_to_all(cvalid, self.axis, split_axis=0, concat_axis=0, tiled=True)
                 new_rows, m = ops_mod.compact(got.reshape(-1, k), gvalid.reshape(-1), out_w)
             buf, n2 = ops_mod.queue_append(out_buf[0], out_n[0], new_rows, m)
-            return rem[None], buf[None], n2[None]
+            comm = jnp.stack([remote, stolen])[None]  # [1, 2]
+            return rem[None], buf[None], n2[None], comm
 
-        return self._shardmap(f, 5, 3)
+        return self._shardmap(f, 5, 4)
+
+    def _build_shuffle_step(self, key_col: int):
+        """Pop a batch from an input queue, hash-route each row to shard
+        ``row[key_col] % P`` with one all_to_all, append arrivals to the join
+        side buffer. Also returns the number of rows that crossed shards."""
+        b = self.cfg.batch_size
+        p = self.p
+
+        def f(in_buf, in_n, side_buf, side_n):
+            rows, take, rem = ops_mod.queue_pop(in_buf[0], in_n[0], b)
+            valid = jnp.arange(b) < take
+            send = ops_mod.partition_rows_by_key(rows, valid, rows[:, key_col], p)
+            moved = self._offshard_count(send[:, :, 0] != INVALID)
+            got = jax.lax.all_to_all(send, self.axis, split_axis=0, concat_axis=0, tiled=True)
+            flat = got.reshape(p * b, rows.shape[1])
+            packed, m = ops_mod.compact(flat, flat[:, 0] != INVALID, p * b)
+            buf, n2 = ops_mod.queue_append(side_buf[0], side_n[0], packed, m)
+            return rem[None], buf[None], n2[None], moved[None]
+
+        return self._shardmap(f, 4, 4)
+
+    def _build_prepare_step(self, key_cols: Tuple[int, ...]):
+        def f(side_buf, side_n):
+            keys, sorted_buf = ops_mod.join_prepare(side_buf[0], side_n[0], key_cols)
+            return keys[None], sorted_buf[None]
+
+        return self._shardmap(f, 2, 2)
+
+    def _build_probe_step(self, op: OpDesc):
+        b = self.cfg.batch_size
+        out_cap = self.cfg.join_out_capacity
+        key_right, right_extra = op.key_right, op.right_extra
+        cross_neq, cross_lt = op.cross_neq, op.cross_lt
+
+        def f(skeys, sbuf, r_buf, r_n, out_buf, out_n):
+            rrows, take, rem = ops_mod.queue_pop(r_buf[0], r_n[0], b)
+            out, m, overflow = ops_mod.join_probe(
+                skeys[0], sbuf[0], rrows, take,
+                key_right, right_extra, cross_neq, cross_lt, out_cap,
+            )
+            buf, n2 = ops_mod.queue_append(out_buf[0], out_n[0], out, m)
+            return buf[None], n2[None], rem[None], overflow[None]
+
+        return self._shardmap(f, 6, 4)
 
     # ------------------------------------------------------------------
 
-    def run(self, query: QueryGraph, space: str = "huge") -> Tuple[int, Dict]:
-        plan = optimal_plan(query, GraphStats.from_graph(self.graph), self.p, space)
-        flow = translate(plan)
-        chain = wco_chain(flow)
-        if chain is None:
-            raise ValueError(
-                "distributed engine runs extend/verify-chain plans; this plan "
-                "has a PUSH-JOIN barrier — use the single-process engine"
-            )
+    def _build_runtimes(self, flow: Dataflow) -> List[object]:
+        ops = flow.ops
         b = self.cfg.batch_size
-        cap = self.cfg.queue_capacity
-        bufs, ns = {}, {}
-        for i, op in enumerate(chain[:-1]):
-            width = len(op.schema)
-            slack = b if op.kind in ("scan", "verify") else b * self.d_pad
-            bufs[i] = jax.device_put(
-                jnp.full((self.p, cap + slack, width), INVALID, jnp.int32), self.sh(3)
-            )
-            ns[i] = jax.device_put(jnp.zeros((self.p,), jnp.int32), self.sh(1))
-        cursor = jax.device_put(jnp.zeros((self.p,), jnp.int32), self.sh(1))
+        queues: Dict[int, _DQueue] = {}
+        for i, op in enumerate(ops):
+            if op.kind == "sink":
+                continue
+            slack = {
+                "scan": b,
+                "verify": b,
+                "extend": b * self.d_pad,
+                "join": self.cfg.join_out_capacity,
+            }[op.kind]
+            queues[i] = _DQueue(self, len(op.schema), slack)
 
-        scan_step = self._build_scan_step(chain[0])
-        steps = {
-            i: self._build_extend_step(op, op.kind == "verify")
-            for i, op in enumerate(chain)
-            if op.kind in ("extend", "verify")
+        runtimes: List[object] = []
+        for i, op in enumerate(ops):
+            if op.kind == "scan":
+                rt = _DScanRT(self, op, queues[i])
+            elif op.kind in ("extend", "verify"):
+                rt = _DExtendRT(self, op, queues[op.inputs[0]], queues[i])
+            elif op.kind == "join":
+                rt = _DJoinRT(
+                    self, op, queues[op.inputs[0]], queues[op.inputs[1]], queues[i]
+                )
+            else:
+                rt = _DSinkRT(self, op, queues[op.inputs[0]])
+            runtimes.append(rt)
+
+        # Join barriers: probing may start only once every ancestor of the
+        # left input has drained — no scans pending, no queued rows, no
+        # unprobed rows inside ancestor joins.
+        for i, op in enumerate(ops):
+            if op.kind != "join":
+                continue
+            branch = (*flow.ancestors(op.inputs[0]), op.inputs[0])
+
+            def make_done(branch=branch):
+                def done() -> bool:
+                    for j in branch:
+                        if runtimes[j].internal_pending():
+                            return False
+                        if j in queues and queues[j].max_n > 0:
+                            return False
+                    return True
+                return done
+
+            runtimes[i].left_branch_done = make_done()
+        return runtimes
+
+    def run(
+        self,
+        query_or_plan: QueryGraph | ExecutionPlan | Dataflow,
+        space: str = "huge",
+    ) -> Tuple[int, Dict]:
+        """Plan (if needed), translate, and execute on the mesh. Returns
+        ``(count, stats)``; stats always reports ``engine="shard_map"`` — every
+        operator, PUSH-JOIN included, ran with real collectives."""
+        if isinstance(query_or_plan, Dataflow):
+            flow = query_or_plan
+        else:
+            if isinstance(query_or_plan, QueryGraph):
+                plan = optimal_plan(
+                    query_or_plan, GraphStats.from_graph(self.graph), self.p, space
+                )
+            else:
+                plan = query_or_plan
+            flow = translate(plan)
+
+        # Release the previous run's runtimes (and their device queues) before
+        # allocating fresh ones, so back-to-back runs don't hold both sets.
+        self._last_runtimes = None
+        self.stats = {
+            "engine": "shard_map",
+            "shards": self.p,
+            "joins": flow.num_joins(),
+            "rounds": 0,
+            "a2a_calls": 0,
+            "pulled_vids": 0,
+            "pulled_bytes": 0,
+            "shuffle_rows": 0,
+            "shuffle_bytes": 0,
+            "steal_rows": 0,
+            "steal_bytes": 0,
+            "probe_batches": 0,
         }
-        total_count = 0
-        rounds = 0
-        scan_rounds = self.src.shape[1] // b
-        scans_done = 0
-        while True:
-            progressed = False
-            if scans_done < scan_rounds and cap - int(jnp.max(ns[0])) >= b:
-                bufs[0], ns[0] = scan_step(
-                    self.src, self.dst, self.scan_totals, cursor, bufs[0], ns[0]
-                )
-                cursor = cursor + b
-                scans_done += 1
-                rounds += 1
-                progressed = True
-            for i, op in enumerate(chain):
-                if i not in steps:
-                    continue
-                in_i = i - 1
-                if int(jnp.max(ns[in_i])) <= 0:
-                    continue
-                is_last = i == len(chain) - 2
-                slack = b if op.kind == "verify" else b * self.d_pad
-                if not is_last and cap - int(jnp.max(ns[i])) < slack:
-                    continue
-                ns[in_i], bufs[i], ns[i] = steps[i](
-                    self.adj, bufs[in_i], ns[in_i], bufs[i], ns[i]
-                )
-                rounds += 1
-                progressed = True
-                if is_last:
-                    total_count += int(jnp.sum(ns[i]))
-                    ns[i] = jax.device_put(jnp.zeros((self.p,), jnp.int32), self.sh(1))
-            if not progressed:
-                break
-        self.stats = {"rounds": rounds, "shards": self.p}
-        return total_count, self.stats
+        runtimes = self._build_runtimes(flow)
+        self._last_runtimes = runtimes  # debugging / test introspection
+        sched = AdaptiveScheduler(runtimes)
+        st = sched.run()
+        self.stats["sched_steps"] = st.steps
+        self.stats["sched_backtracks"] = st.backtracks
+        sink = runtimes[flow.sink_index]
+        assert isinstance(sink, _DSinkRT)
+        return sink.count, self.stats

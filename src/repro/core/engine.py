@@ -279,8 +279,12 @@ class _VerifyRT(_BaseRT):
 
 
 class _JoinRT(_BaseRT):
-    """PUSH-JOIN: both inputs fully buffered (barrier, §5.4), then the right
-    buffer is streamed batch-wise against the left buffer."""
+    """PUSH-JOIN: the left input is fully buffered (barrier, §5.4), then the
+    right queue is streamed batch-wise against it. The barrier is expressed
+    through ``has_input``: the join reports no input until every ancestor of
+    its left branch has drained (``left_branch_done``, wired by the engine
+    from Dataflow.ancestors), so the generalised AdaptiveScheduler drives
+    whole DAGs without per-branch sub-schedulers."""
 
     def __init__(self, engine, desc, left_q, right_q, out_q):
         super().__init__(engine, desc, out_q)
@@ -289,22 +293,21 @@ class _JoinRT(_BaseRT):
         self.shuffle_charged = False
         self.right_batch = max(64, engine.cfg.batch_size)
         self._prepared = None  # (sorted_keys, sorted_buf) once left side final
+        self.left_branch_done = lambda: True  # installed by the engine
 
     def has_input(self) -> bool:
-        return self.right_q.n > 0
+        return self.right_q.n > 0 and self.left_branch_done()
 
     def required_slack(self) -> int:
         return self.e.cfg.join_out_capacity
 
     def run_one(self) -> None:
         e = self.e
+        frac = (e.cfg.num_machines - 1) / max(1, e.cfg.num_machines)
         if not self.shuffle_charged:
-            # Shuffle both sides once: (P-1)/P of rows cross the network.
-            frac = (e.cfg.num_machines - 1) / max(1, e.cfg.num_machines)
-            nbytes = (
-                self.left_q.n * self.left_q.width + self.right_q.n * self.right_q.width
-            ) * 4 * frac
-            e.stats.pushed_bytes += int(nbytes)
+            # Left side is complete at the barrier: charge its shuffle once.
+            # The right side streams, so it is charged per popped batch below.
+            e.stats.pushed_bytes += int(self.left_q.n * self.left_q.width * 4 * frac)
             self.shuffle_charged = True
         if self._prepared is None:
             # The left branch is complete (barrier, §5.4): merge-sort it by key
@@ -315,6 +318,7 @@ class _JoinRT(_BaseRT):
             )
             e.stats.compute_time += time.perf_counter() - t0
         rrows, rn = self.right_q.pop(self.right_batch)
+        e.stats.pushed_bytes += int(int(rn) * self.right_q.width * 4 * frac)
         t0 = time.perf_counter()
         out, m, overflow = ops_mod.join_probe(
             self._prepared[0], self._prepared[1], rrows, rn,
@@ -505,35 +509,27 @@ class HugeEngine:
             else:
                 runtimes[i] = _SinkRT(self, op, self._queues[op.inputs[0]])
 
-        sched_stats = ScheduleStats()
+        # Join barriers: a PUSH-JOIN may only probe once every ancestor of its
+        # left (buffered) input has drained. With the barrier inside each
+        # join's has_input, one generalised scheduler pass over the dataflow's
+        # topological order executes the whole DAG — the per-branch pipeline
+        # recursion this engine used to carry is retired.
+        for i, op in enumerate(ops):
+            if op.kind != "join":
+                continue
+            branch = (*flow.ancestors(op.inputs[0]), op.inputs[0])
 
-        def run_pipeline(end_idx: int):
-            chain_idx = []
-            i = end_idx
-            while True:
-                chain_idx.append(i)
-                op = ops[i]
-                if op.kind in ("scan", "join"):
-                    break
-                i = op.inputs[0]
-            chain_idx.reverse()
-            head = ops[chain_idx[0]]
-            if head.kind == "join":
-                run_pipeline(head.inputs[0])
-                run_pipeline(head.inputs[1])
-            sched = AdaptiveScheduler(
-                [runtimes[j] for j in chain_idx], memory_probe=self._memory_probe
-            )
-            st = sched.run()
-            for f in dataclasses.fields(ScheduleStats):
-                setattr(
-                    sched_stats, f.name,
-                    max(getattr(sched_stats, f.name), getattr(st, f.name))
-                    if f.name.startswith("peak")
-                    else getattr(sched_stats, f.name) + getattr(st, f.name),
-                )
+            def make_done(branch=branch):
+                def done() -> bool:
+                    return not any(runtimes[j].has_input() for j in branch)
+                return done
 
-        run_pipeline(flow.sink_index)
+            runtimes[i].left_branch_done = make_done()
+
+        sched = AdaptiveScheduler(
+            [runtimes[i] for i in range(len(ops))], memory_probe=self._memory_probe
+        )
+        sched_stats = sched.run()
 
         self.stats.peak_queue_rows = sched_stats.peak_queue_rows
         self.stats.peak_queue_bytes = sched_stats.peak_queue_bytes

@@ -17,6 +17,12 @@ This module is the Alg.-1-style optimiser for those joins: a byte-cost model
 per communication mode, and a decision function the layers consult at trace
 time. The decision is static per (arch × shape) — exactly like the paper's
 plan-time physical configuration — so XLA sees a fixed collective schedule.
+
+``enum_join_mode`` is the same Eq.-3 rule for the paper's native workload: a
+distributed subgraph-enumeration join, where push = the PUSH-JOIN hash
+shuffle of both intermediate result sets (distributed.py executes it with
+the same dense ``all_to_all`` machinery as the fetch stage) and pull = the
+k·|E_G| operand-fetch bound of Remark 3.1.
 """
 from __future__ import annotations
 
@@ -33,6 +39,40 @@ class CommDecision:
     @property
     def ratio(self) -> float:
         return self.push_bytes / max(self.pull_bytes, 1.0)
+
+
+def enum_join_mode(
+    *,
+    left_rows: float,       # |R(q'_l)| partial matches entering the join
+    right_rows: float,      # |R(q'_r)|
+    width_left: int,        # row width (matched vertices) per side
+    width_right: int,
+    graph_edges: float,     # |E_G| (undirected)
+    machines: int,
+    bytes_per_elem: int = 4,
+) -> CommDecision:
+    """Eq. 3 for a distributed subgraph-enumeration join (Property 3.1).
+
+    push: shuffle both intermediate result sets by join key — (k−1)/k of the
+          rows cross the network (the PUSH-JOIN hash-a2a of distributed.py).
+    pull: fetch operand adjacency on demand, bounded by k·|E_G| edge records
+          (Remark 3.1 — each machine pulls at most the whole data graph).
+
+    This is the decision the optimiser's ``_comm_cost`` applies at plan time;
+    exposed here so benchmarks/exp_dist_hybrid.py can print the model's
+    prediction next to the traffic the collectives actually moved.
+    """
+    frac = (machines - 1) / max(1, machines)
+    push = (left_rows * width_left + right_rows * width_right) * bytes_per_elem * frac
+    pull = machines * graph_edges * 2 * bytes_per_elem
+    mode = "push" if push <= pull else "pull"
+    return CommDecision(
+        mode=mode, push_bytes=push, pull_bytes=pull,
+        reason=(
+            f"|R_l|·w_l+|R_r|·w_r={left_rows:.3g}·{width_left}+"
+            f"{right_rows:.3g}·{width_right} vs k·|E_G|={machines}·{graph_edges:.3g}"
+        ),
+    )
 
 
 def moe_dispatch_mode(

@@ -77,6 +77,36 @@ def queue_pop(buf: jax.Array, n: jax.Array, batch: int):
     return rows, take, n - take
 
 
+@functools.partial(jax.jit, static_argnames=("num_shards",))
+def partition_rows_by_key(rows: jax.Array, valid: jax.Array, key: jax.Array,
+                          num_shards: int) -> jax.Array:
+    """Group rows by destination shard ``key % num_shards`` for an all_to_all.
+
+    Returns ``send[P, B, K]`` (INVALID-padded): ``send[d]`` holds the rows
+    destined to shard ``d``, packed to the front. This is the send tensor of
+    the PUSH-JOIN hash shuffle (DESIGN.md §Shuffle-join) — the collective
+    itself lives in distributed.py; this part is pure and unit-testable.
+    """
+    b, k = rows.shape
+    dest = jnp.where(valid, key % num_shards, num_shards)
+    order = jnp.argsort(dest, stable=True)
+    sdest = jnp.take(dest, order)
+    srows = jnp.take(rows, order, axis=0)
+    cnt = jax.ops.segment_sum(
+        (sdest < num_shards).astype(jnp.int32), sdest, num_segments=num_shards + 1
+    )[:num_shards]
+    offs = jnp.cumsum(cnt) - cnt
+    offs_ext = jnp.concatenate([offs, jnp.zeros((1,), jnp.int32)])
+    slot = jnp.arange(b, dtype=jnp.int32) - jnp.take(
+        offs_ext, jnp.minimum(sdest, num_shards)
+    )
+    ok = sdest < num_shards
+    send = jnp.full((num_shards, b, k), INVALID, jnp.int32).at[
+        jnp.where(ok, sdest, num_shards), jnp.where(ok, slot, b)
+    ].set(srows, mode="drop")
+    return send
+
+
 # ---------------------------------------------------------------------------
 # SCAN
 # ---------------------------------------------------------------------------

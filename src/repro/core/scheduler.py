@@ -1,4 +1,4 @@
-"""BFS/DFS-adaptive scheduler — paper Algorithm 5 (§5.2).
+"""BFS/DFS-adaptive scheduler — paper Algorithm 5 (§5.2), generalised to DAGs.
 
 Each operator owns a fixed-capacity output queue. The scheduler lets the
 current operator consume as many input batches as possible (BFS-style, max
@@ -9,8 +9,20 @@ are preallocated device arrays, so the paper's O(|V_q|²·D_G) bound becomes a
 structural compile-time constant.
 
 The scheduler works over an abstract runtime interface so the same loop
-drives SCAN / PULL-EXTEND / VERIFY / PUSH-JOIN chains (engine.py) and the
-distributed shard_map engine (distributed.py).
+drives SCAN / PULL-EXTEND / VERIFY / PUSH-JOIN dataflows in both the
+single-process engine (engine.py) and the distributed shard_map engine
+(distributed.py).
+
+Operator *DAGs* (plans with PUSH-JOIN barriers) are scheduled as their
+topological order (Dataflow emission order): every producer precedes its
+consumers, so "backtrack to the precursor" is simply "move left". A
+multi-input operator such as PUSH-JOIN participates through the same
+four-method protocol — its ``has_input`` consults *both* upstream queues (and
+its barrier condition: probing only once the buffered branch has drained, see
+DESIGN.md §Shuffle-join), so the scheduler itself stays oblivious to arity.
+Termination is unchanged: the loop exits when no operator reports input,
+and a barrier op always eventually unblocks because its upstream branch
+strictly precedes it in the order.
 """
 from __future__ import annotations
 
@@ -38,12 +50,14 @@ class ScheduleStats:
 
 
 class AdaptiveScheduler:
-    """Algorithm 5 over a linear operator chain.
+    """Algorithm 5 over a topologically ordered operator list (chain or DAG).
 
     The paper's literal pseudocode bounces precursor↔successor when the head
     of the chain is exhausted; we resolve direction by whether *any* upstream
     operator still has input (identical schedule on live inputs, guaranteed
-    termination on drained ones).
+    termination on drained ones). For DAGs, "upstream" means "earlier in the
+    topological order" — a superset of the true ancestors, which only makes
+    the liveness check conservative, never wrong.
     """
 
     def __init__(self, chain: List[OperatorRuntime], memory_probe=None):
@@ -90,13 +104,36 @@ class AdaptiveScheduler:
                 else:
                     cur += 1
                 continue
-            # O has no input: backtrack if upstream work exists, else advance.
+            # O has no input: backtrack to the nearest upstream op that can
+            # actually *run* (has input and output room), jumping over blocked
+            # and drained ones. Stepping back one at a time would strand the
+            # cursor against a blocked multi-input op — it has input, so it
+            # bounces the cursor forward again, and runnable work further
+            # upstream is never reached. An upstream op that is merely blocked
+            # is no reason to stop: in a DAG its relief (the consumer of its
+            # full queue) lies *downstream*, so prefer advancing when anything
+            # later is live. (On a linear chain the op downstream of a blocked
+            # op always has input, so neither situation arises and the
+            # schedule is unchanged.)
             stall += 1
-            if any(chain[j].has_input() for j in range(cur)):
+            up_run = next(
+                (
+                    j for j in range(cur - 1, -1, -1)
+                    if chain[j].has_input()
+                    and chain[j].output_free() >= chain[j].required_slack()
+                ),
+                None,
+            )
+            down_live = any(chain[j].has_input() for j in range(cur + 1, len(chain)))
+            if up_run is not None:
                 self.stats.backtracks += 1
-                cur -= 1
-            elif any(chain[j].has_input() for j in range(cur + 1, len(chain))):
+                cur = up_run
+            elif down_live:
                 cur += 1
+            elif any(chain[j].has_input() for j in range(cur)):
+                self.stats.backtracks += 1
+                cur -= 1  # only blocked work left upstream: let the stall
+                          # guard prove it a real deadlock
             else:
-                break  # every operator drained → chain complete
+                break  # every operator drained → dataflow complete
         return self.stats

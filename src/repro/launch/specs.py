@@ -3,7 +3,7 @@
 Everything here is abstract — weak-type-correct, shardable, zero allocation —
 so the dry-run can lower+compile full-size models on 512 host devices.
 
-Per-family shape conventions (documented in DESIGN.md):
+Per-family shape conventions (documented in DESIGN.md §Shape-conventions):
   * [vlm]/[audio-decoder-only]: ``frontend_len`` patch/frame embeddings are
     prepended; text tokens fill the remaining ``seq_len − frontend_len``.
   * enc-dec (seamless): encoder frames = seq_len/2, decoder tokens = seq_len/2

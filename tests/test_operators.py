@@ -83,3 +83,22 @@ def test_scan_batch_filters():
     # lt=(1,): keep src < dst only
     got = {tuple(map(int, r)) for r in np.asarray(rows[: int(n)])}
     assert got == {(0, 1), (0, 2), (1, 2)}
+
+
+def test_partition_rows_by_key_groups_by_dest_shard():
+    rows = jnp.asarray(
+        [[0, 1], [5, 2], [3, 9], [7, 4], [2, 2], [9, 9]], jnp.int32
+    )
+    valid = jnp.asarray([True, True, True, True, False, True])
+    send = ops.partition_rows_by_key(rows, valid, rows[:, 0], 4)
+    assert send.shape == (4, 6, 2)
+    got = {
+        d: [tuple(map(int, r)) for r in np.asarray(send[d]) if r[0] != INVALID]
+        for d in range(4)
+    }
+    assert got[0] == [(0, 1)]
+    assert got[1] == [(5, 2), (9, 9)]      # 5 % 4 == 9 % 4 == 1
+    assert got[2] == []                    # the only key%4==2 row was invalid
+    assert got[3] == [(3, 9), (7, 4)]
+    # every valid row lands exactly once, invalid rows are dropped
+    assert sum(len(v) for v in got.values()) == 5

@@ -1,6 +1,9 @@
 """Property-based tests (hypothesis) on the system's invariants."""
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis (pip install -r requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st, HealthCheck
 
 from repro.core import cache as lrbu

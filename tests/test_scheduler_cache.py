@@ -100,3 +100,83 @@ def test_value_cache_roundtrip():
     assert bool(got_hit[0]) and bool(got_hit[1])
     np.testing.assert_array_equal(np.asarray(got_rows[0]), np.asarray(rows[0]))
     assert int(got_degs[1]) == 8
+
+
+class FakeJoin:
+    """Barrier op over two FakeOp branches: buffers the left side, streams the
+    right side only once the left branch has drained (PUSH-JOIN semantics)."""
+
+    def __init__(self, label, left, right):
+        self.label = label
+        self.left, self.right = left, right
+        self.out = 0
+        self.probed = 0
+        self.runs = 0
+
+    def left_done(self):
+        return self.left.inbox == 0
+
+    def has_input(self):
+        return self.right.out > 0 and self.left_done()
+
+    def output_free(self):
+        return 1 << 30
+
+    def required_slack(self):
+        return 0
+
+    def run_one(self):
+        self.right.out -= 1
+        self.probed += 1
+        self.out += 1
+        self.runs += 1
+
+
+def test_scheduler_runs_dag_with_join_barrier():
+    """Topologically ordered DAG: two source chains feeding a barrier join.
+    The join must not probe before the left branch drains, and everything
+    must still terminate with all rows processed."""
+    left = FakeOp("scan-L", 7, 1 << 30)
+    right = FakeOp("scan-R", 5, 1 << 30)
+    right.consumer = None  # right rows accumulate in right.out
+    join = FakeJoin("join", left, right)
+    order = [left, right, join]
+
+    probed_before_left_done = []
+    orig = join.run_one
+
+    def run_one():
+        probed_before_left_done.append(left.inbox > 0)
+        orig()
+
+    join.run_one = run_one
+    AdaptiveScheduler(order).run()
+    assert join.probed == 5
+    assert not any(probed_before_left_done), "join probed before the barrier"
+
+
+def test_scheduler_advances_past_drained_siblings():
+    """A blocked op must not trap the cursor when its drain lies downstream
+    past a drained sibling branch (the DAG ping-pong regression)."""
+    class Sticky(FakeOp):
+        """Produces into a bounded queue drained only by the far consumer."""
+        def __init__(self, label, produce):
+            super().__init__(label, produce, out_cap=2, slack=1)
+
+    src = Sticky("src", 6)
+    drained = FakeOp("sibling", 0, 1 << 30)
+    far = FakeOp("far-consumer", 0, 1 << 30)
+
+    # wire: src.out consumed by far (two positions later in topo order)
+    def far_has_input():
+        return src.out > 0
+
+    def far_run_one():
+        src.out -= 1
+        far.runs += 1
+
+    far.has_input = far_has_input
+    far.run_one = far_run_one
+    AdaptiveScheduler([src, drained, far]).run()
+    assert src.inbox == 0 and src.out == 0
+    assert far.runs == 6
