@@ -1,8 +1,10 @@
 """Shared benchmark fixtures: graphs, queries, engine runners, CSV output."""
 from __future__ import annotations
 
+import json
+import os
 import time
-from typing import Dict, Optional
+from typing import Dict, List, Optional
 
 from repro.core.cost import GraphStats
 from repro.core.dataflow import translate
@@ -32,6 +34,7 @@ def run_query(
     cache_capacity: int = 1 << 13,
     cache_policy: str = "lrbu",
     join_out_capacity: int = 1 << 18,
+    fused: bool = False,
 ) -> EnumerationResult:
     """CI-scale single run. jit caches are process-global, so within a suite
     the first run of each operator signature pays compile and the rest are
@@ -45,6 +48,7 @@ def run_query(
         num_machines=machines,
         join_out_capacity=join_out_capacity,
         join_buffer_capacity=1 << 21,
+        fused=fused,
     )
     plan = optimal_plan(query, GraphStats.from_graph(graph), machines, space)
     flow = translate(plan)
@@ -55,3 +59,29 @@ def run_query(
 def emit(name: str, us_per_call: float, derived: str):
     """One CSV row per benchmark result: name,us_per_call,derived."""
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def record_bench(name: str, entries: List[dict]) -> str:
+    """Append trajectory points to ``BENCH_<name>.json`` at the repo root.
+
+    Entry format (EXPERIMENTS.md §Perf): each point carries ``suite``,
+    ``case``, ``mode``, ``matches``, ``wall_s``, ``matches_per_s``; this
+    helper stamps ``recorded`` (date) so successive PRs accumulate a
+    regression trajectory instead of overwriting it."""
+    path = os.path.join(REPO_ROOT, f"BENCH_{name}.json")
+    doc = {"bench": name, "entries": []}
+    if os.path.exists(path):
+        with open(path) as f:
+            doc = json.load(f)
+    stamp = time.strftime("%Y-%m-%d")
+    doc["updated"] = stamp
+    doc.setdefault("entries", []).extend(
+        [dict(e, recorded=stamp) for e in entries]
+    )
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2)
+        f.write("\n")
+    return path

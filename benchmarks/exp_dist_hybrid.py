@@ -37,7 +37,7 @@ def inner() -> None:
 
     import jax
 
-    from benchmarks.common import emit
+    from benchmarks.common import emit, record_bench
     from repro.core import query as Q
     from repro.core.cost import GraphStats
     from repro.core.distributed import DistConfig, DistributedEngine
@@ -47,31 +47,48 @@ def inner() -> None:
     mesh = jax.make_mesh((SHARDS,), ("shards",))
     graph = powerlaw_graph(1 << 9, 6.0, seed=7)
     stats = GraphStats.from_graph(graph)
-    eng = DistributedEngine(
-        graph, mesh, DistConfig(batch_size=256, queue_capacity=1 << 15)
-    )
+    engines = {
+        False: DistributedEngine(
+            graph, mesh, DistConfig(batch_size=256, queue_capacity=1 << 15)
+        ),
+        True: DistributedEngine(
+            graph, mesh,
+            DistConfig(batch_size=256, queue_capacity=1 << 15, fused=True),
+        ),
+    }
+    entries = []
     for qname in QUERIES:
         q = Q.PAPER_QUERIES[qname]
         counts = {}
         for system, space in SYSTEMS:
-            t0 = time.perf_counter()
-            count, s = eng.run(q, space=space)
-            wall = time.perf_counter() - t0
-            counts[system] = count
-            assert s["engine"] == "shard_map"
-            emit(
-                f"exp_dist_hybrid/{system}/{qname}",
-                wall * 1e6,
-                f"count={count};joins={s['joins']};a2a={s['a2a_calls']};"
-                f"pull={s['pulled_bytes'] / 1e6:.3f}MB;"
-                f"push={s['shuffle_bytes'] / 1e6:.3f}MB;"
-                f"steal={s['steal_bytes'] / 1e6:.3f}MB",
-            )
+            for fused in (False, True):
+                t0 = time.perf_counter()
+                count, s = engines[fused].run(q, space=space)
+                wall = time.perf_counter() - t0
+                counts[(system, fused)] = count
+                assert s["engine"] == "shard_map"
+                mode = "fused" if fused else "unfused"
+                emit(
+                    f"exp_dist_hybrid/{system}/{qname}"
+                    + ("/fused" if fused else ""),
+                    wall * 1e6,
+                    f"count={count};joins={s['joins']};a2a={s['a2a_calls']};"
+                    f"pull={s['pulled_bytes'] / 1e6:.3f}MB;"
+                    f"push={s['shuffle_bytes'] / 1e6:.3f}MB;"
+                    f"steal={s['steal_bytes'] / 1e6:.3f}MB",
+                )
+                entries.append({
+                    "suite": "exp_dist_hybrid", "case": f"{system}/{qname}",
+                    "mode": mode, "matches": int(count),
+                    "wall_s": round(wall, 4),
+                    "matches_per_s": round(count / max(wall, 1e-9), 1),
+                })
         assert len(set(counts.values())) == 1, f"{qname}: {counts}"
         # Eq.-3 prediction for this query's top-level join volume: use the
         # total match count as the intermediate-result proxy (CI scale).
+        hybrid_count = counts[("hybrid", False)]
         dec = enum_join_mode(
-            left_rows=max(counts["hybrid"], 1), right_rows=max(counts["hybrid"], 1),
+            left_rows=max(hybrid_count, 1), right_rows=max(hybrid_count, 1),
             width_left=q.num_vertices, width_right=q.num_vertices,
             graph_edges=stats.num_directed_edges / 2, machines=SHARDS,
         )
@@ -80,6 +97,8 @@ def inner() -> None:
             f"mode={dec.mode};push={dec.push_bytes / 1e6:.3f}MB;"
             f"pull={dec.pull_bytes / 1e6:.3f}MB",
         )
+    path = record_bench("fused_hotpath", entries)
+    print(f"# wrote {path}")
 
 
 def main() -> None:

@@ -1,21 +1,38 @@
 """Paper Table 4: enumeration throughput (matches/second) on the largest
-CI-scale graph, queries q1-q3."""
+CI-scale graph, queries q1-q3 — in both ``fused=`` modes. Counts must be
+identical; the fused/unfused matches-per-second pair is appended to
+``BENCH_fused_hotpath.json`` (EXPERIMENTS.md §Perf)."""
 from __future__ import annotations
 
-from benchmarks.common import bench_graph, emit, run_query
+from benchmarks.common import bench_graph, emit, record_bench, run_query
 
 
 def main():
     graph = bench_graph(n=1 << 12, deg=8.0)
+    entries = []
     for qname in ("q1", "q2", "q3"):
-        res = run_query(graph, qname, batch_size=1024, queue_capacity=1 << 17)
-        s = res.stats
-        thr = res.count / max(s.wall_time, 1e-9)
-        emit(
-            f"table4/{qname}",
-            s.wall_time * 1e6,
-            f"throughput={thr:,.0f}/s;count={res.count};M={s.peak_queue_bytes / 1e6:.1f}MB",
-        )
+        counts = {}
+        for fused in (False, True):
+            res = run_query(
+                graph, qname, batch_size=1024, queue_capacity=1 << 17, fused=fused
+            )
+            s = res.stats
+            thr = res.count / max(s.wall_time, 1e-9)
+            mode = "fused" if fused else "unfused"
+            counts[mode] = res.count
+            emit(
+                f"table4/{qname}" + ("/fused" if fused else ""),
+                s.wall_time * 1e6,
+                f"throughput={thr:,.0f}/s;count={res.count};M={s.peak_queue_bytes / 1e6:.1f}MB",
+            )
+            entries.append({
+                "suite": "table4_throughput", "case": qname, "mode": mode,
+                "matches": int(res.count), "wall_s": round(s.wall_time, 4),
+                "matches_per_s": round(thr, 1),
+            })
+        assert counts["fused"] == counts["unfused"], (qname, counts)
+    path = record_bench("fused_hotpath", entries)
+    print(f"# wrote {path}")
 
 
 if __name__ == "__main__":

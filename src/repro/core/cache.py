@@ -172,6 +172,17 @@ def fetch_update_values(state: LRBUState, vids: jax.Array, rows: jax.Array, degs
 
 
 @jax.jit
+def probe_indices(state: LRBUState, vids: jax.Array):
+    """Read-only probe for the fused kernels: flat slab index of each vid into
+    ``state.values.reshape(S*W, D)`` plus the hit mask. Misses return index 0
+    with hit=False — the fused kernel's select mask routes them to the
+    fallback table, so the placeholder row is never read."""
+    sets, way, hit = _locate(state, vids)
+    flat = sets * state.num_ways + jnp.where(hit, way, 0)
+    return jnp.where(hit, flat, 0).astype(jnp.int32), hit
+
+
+@jax.jit
 def cache_lookup_values(state: LRBUState, vids: jax.Array):
     """Read-only Get() — zero-copy in the paper's sense: pure gather, no state
     mutation. Returns (rows[N, D], deg[N], hit[N])."""

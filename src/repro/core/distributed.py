@@ -60,6 +60,8 @@ class DistConfig:
     join_out_capacity: int = 1 << 17     # worst-case rows per probe step
     axis: str = "shards"
     rebalance: bool = True               # inter-machine work stealing
+    fused: bool = False                  # fused extend/verify + probe kernels
+    force_kernel: bool = False           # interpret-mode kernels on CPU (CI)
 
 
 class _DQueue:
@@ -444,6 +446,24 @@ class DistributedEngine:
         rows = jnp.where(local[:, None], lrows, jnp.where(hit[:, None], rrows, INVALID))
         return jnp.where(ok[:, None], rows, INVALID)
 
+    def _fused_addressing(self, table_vids, adj, rows, ext):
+        """The _lookup gather as fused-kernel slab addressing: tab0 = fetched
+        remote table, tab1 = local adjacency. Returns (idx[2, B, E], sel, ok)
+        with sel routing remote hits to the table and ok covering exactly the
+        rows _lookup would return non-INVALID (local or fetched)."""
+        p = self.p
+        me = jax.lax.axis_index(self.axis)
+        vids = rows[:, list(ext)]                       # [B, E]
+        okv = (vids != INVALID) & (vids >= 0)
+        local = okv & ((vids % p) == me)
+        idx1 = jnp.clip(jnp.where(okv, vids // p, 0), 0, adj.shape[0] - 1)
+        idx0 = jnp.clip(jnp.searchsorted(table_vids, vids), 0, table_vids.shape[0] - 1)
+        hit = jnp.take(table_vids, idx0) == vids
+        sel = (~local) & hit
+        ok = okv & (local | hit)
+        idx = jnp.stack([idx0.astype(jnp.int32), idx1.astype(jnp.int32)])
+        return idx, sel.astype(jnp.int32), ok.astype(jnp.int32)
+
     # ------------------------------------------------------------------
     # jitted shard_map step programs
     # ------------------------------------------------------------------
@@ -476,6 +496,7 @@ class DistributedEngine:
         ext, lt, gt = op.ext, op.lt_positions, op.gt_positions
         vpos = op.verify_pos
         rebalance = self.cfg.rebalance
+        fused, force_kernel = self.cfg.fused, self.cfg.force_kernel
         p = self.p
 
         def f(adj3, in_buf, in_n, out_buf, out_n):
@@ -485,7 +506,17 @@ class DistributedEngine:
             tv, tr, remote = self._fetch(adj, rows, valid, ext)
             stolen = jnp.zeros((), jnp.int32)
             k = rows.shape[1]
-            if is_verify:
+            if is_verify and fused:
+                from repro.kernels.intersect import ops as ik
+
+                idx, sel, okm = self._fused_addressing(tv, adj, rows, ext)
+                mask = valid & ik.fused_verify(
+                    tr, adj, idx, sel, okm, rows, vpos=vpos,
+                    force_kernel=force_kernel,
+                )
+                new_rows, m = ops_mod.compact(rows, mask, b)
+                out_w = b
+            elif is_verify:
                 target = rows[:, vpos : vpos + 1]
                 mask = valid
                 for d in ext:
@@ -494,17 +525,27 @@ class DistributedEngine:
                 new_rows, m = ops_mod.compact(rows, mask, b)
                 out_w = b
             else:
-                cands = self._lookup(tv, tr, adj, rows[:, ext[0]])
-                mask = (cands != INVALID) & valid[:, None]
-                for d in ext[1:]:
-                    other = self._lookup(tv, tr, adj, rows[:, d])
-                    mask = mask & ops_mod.row_membership(other, cands)
-                for col in range(k):
-                    mask = mask & (cands != rows[:, col : col + 1])
-                for pp in lt:
-                    mask = mask & (cands < jnp.where(valid, rows[:, pp], -1)[:, None])
-                for pp in gt:
-                    mask = mask & (cands > jnp.where(valid, rows[:, pp], INVALID)[:, None])
+                if fused:
+                    from repro.kernels.intersect import ops as ik
+
+                    idx, sel, okm = self._fused_addressing(tv, adj, rows, ext)
+                    cands, mask = ik.fused_extend(
+                        tr, adj, idx, sel, okm, rows, lt=lt, gt=gt,
+                        force_kernel=force_kernel,
+                    )
+                    mask = mask & valid[:, None]
+                else:
+                    cands = self._lookup(tv, tr, adj, rows[:, ext[0]])
+                    mask = (cands != INVALID) & valid[:, None]
+                    for d in ext[1:]:
+                        other = self._lookup(tv, tr, adj, rows[:, d])
+                        mask = mask & ops_mod.row_membership(other, cands)
+                    for col in range(k):
+                        mask = mask & (cands != rows[:, col : col + 1])
+                    for pp in lt:
+                        mask = mask & (cands < jnp.where(valid, rows[:, pp], -1)[:, None])
+                    for pp in gt:
+                        mask = mask & (cands > jnp.where(valid, rows[:, pp], INVALID)[:, None])
                 d_pad = cands.shape[1]
                 expanded = jnp.concatenate(
                     [jnp.broadcast_to(rows[:, None, :], (b, d_pad, k)), cands[:, :, None]],
@@ -560,11 +601,14 @@ class DistributedEngine:
         key_right, right_extra = op.key_right, op.right_extra
         cross_neq, cross_lt = op.cross_neq, op.cross_lt
 
+        use_kernel, force_kernel = self.cfg.fused, self.cfg.force_kernel
+
         def f(skeys, sbuf, r_buf, r_n, out_buf, out_n):
             rrows, take, rem = ops_mod.queue_pop(r_buf[0], r_n[0], b)
             out, m, overflow = ops_mod.join_probe(
                 skeys[0], sbuf[0], rrows, take,
                 key_right, right_extra, cross_neq, cross_lt, out_cap,
+                use_kernel=use_kernel, force_kernel=force_kernel,
             )
             buf, n2 = ops_mod.queue_append(out_buf[0], out_n[0], out, m)
             return buf[None], n2[None], rem[None], overflow[None]

@@ -56,7 +56,12 @@ class EngineConfig:
     cache_policy: str = "lrbu"             # "lrbu" | "lru" | "direct"
     materialize: bool = False              # keep final matches (tests only)
     materialize_cap: int = 1 << 20
-    use_intersect_kernel: bool = False     # Pallas path (interpret on CPU)
+    use_intersect_kernel: bool = False     # Pallas membership inside extend_batch
+    fused: bool = False                    # fused hot path: LRBU value-cache
+    #   probe → slab gather → intersect in one kernel pass (extend/verify) and
+    #   the compare-count bounds kernel inside PUSH-JOIN probes
+    force_kernel: bool = False             # run fused kernels in interpret mode
+    #   on CPU (CI parity); otherwise non-TPU backends use the ref twins
 
 
 @dataclasses.dataclass
@@ -240,11 +245,19 @@ class _ExtendRT(_BaseRT):
         elif self.comm == "push":
             e.push_wco_stage(rows, n, len(self.desc.ext), rows.shape[1])
         t0 = time.perf_counter()
-        out, m = ops_mod.extend_batch(
-            e.adj, rows, n, self.desc.ext, self.desc.lt_positions,
-            self.desc.gt_positions, e.cfg.batch_size * e.d_pad,
-            use_kernel=e.cfg.use_intersect_kernel,
-        )
+        if e.cfg.fused:
+            tab0, tab1, idx, sel, ok = e._fused_tables(rows, self.desc.ext)
+            out, m = ops_mod.fused_extend_batch(
+                tab0, tab1, idx, sel, ok, rows, n,
+                self.desc.lt_positions, self.desc.gt_positions,
+                e.cfg.batch_size * e.d_pad, force_kernel=e.cfg.force_kernel,
+            )
+        else:
+            out, m = ops_mod.extend_batch(
+                e.adj, rows, n, self.desc.ext, self.desc.lt_positions,
+                self.desc.gt_positions, e.cfg.batch_size * e.d_pad,
+                use_kernel=e.cfg.use_intersect_kernel,
+            )
         cnt = self.out_q.append(out, m)
         e.stats.compute_time += time.perf_counter() - t0
         e.stats.batches += 1
@@ -269,9 +282,16 @@ class _VerifyRT(_BaseRT):
         if self.comm == "pull":
             e.fetch_stage(rows, n, self.desc.ext)
         t0 = time.perf_counter()
-        out, m = ops_mod.verify_batch(
-            e.adj, rows, n, self.desc.ext, self.desc.verify_pos, e.cfg.batch_size
-        )
+        if e.cfg.fused:
+            tab0, tab1, idx, sel, ok = e._fused_tables(rows, self.desc.ext)
+            out, m = ops_mod.fused_verify_batch(
+                tab0, tab1, idx, sel, ok, rows, n, self.desc.verify_pos,
+                e.cfg.batch_size, force_kernel=e.cfg.force_kernel,
+            )
+        else:
+            out, m = ops_mod.verify_batch(
+                e.adj, rows, n, self.desc.ext, self.desc.verify_pos, e.cfg.batch_size
+            )
         cnt = self.out_q.append(out, m)
         e.stats.compute_time += time.perf_counter() - t0
         e.stats.batches += 1
@@ -324,6 +344,7 @@ class _JoinRT(_BaseRT):
             self._prepared[0], self._prepared[1], rrows, rn,
             self.desc.key_right, self.desc.right_extra,
             self.desc.cross_neq, self.desc.cross_lt, e.cfg.join_out_capacity,
+            use_kernel=e.cfg.fused, force_kernel=e.cfg.force_kernel,
         )
         if bool(overflow):
             e.stats.join_overflows += 1
@@ -397,6 +418,13 @@ class HugeEngine:
                 self.cfg.num_machines, self.cfg.cache_capacity, ways
             )
             self._cache_update = jax.vmap(_POLICIES[self.cfg.cache_policy])
+        # Device-level LRBU *value* cache serving adjacency slabs to the fused
+        # kernels (the per-machine caches above are stats-only simulation).
+        self._vcache = None
+        if self.cfg.fused and self.cfg.cache_capacity > 0:
+            self._vcache = lrbu.make_cache(
+                self.cfg.cache_capacity, ways=self.cfg.cache_ways, d_pad=self.d_pad
+            )
 
     # -- fetch stage (pull accounting) ---------------------------------------
 
@@ -434,6 +462,35 @@ class HugeEngine:
         self.stats.cache_hits += int(jnp.sum(hit))
         self.stats.cache_misses += int(jnp.sum(miss))
         self.stats.comm_time += time.perf_counter() - t0
+
+    # -- fused hot path: value-cache probe prologue ----------------------------
+
+    def _fused_tables(self, rows: jax.Array, ext: Tuple[int, ...]):
+        """Build the (tab0, tab1, idx, sel, ok) slab addressing of the fused
+        kernels for one batch: insert the batch's deduped vertices into the
+        LRBU value cache (seal/release), then probe it — hits read cache slabs
+        (tab0), misses fall back to the adjacency table (tab1)."""
+        v = self.graph.num_vertices
+        vids = rows[:, list(ext)]                       # [B, E]
+        ok = (vids >= 0) & (vids < v)
+        idx1 = jnp.clip(vids, 0, v - 1)
+        if self._vcache is not None:
+            flat = jnp.where(ok, vids, INVALID).reshape(-1)
+            uniq = ops_mod.dedup_pad(flat)
+            safe = jnp.clip(uniq, 0, v - 1)
+            slabs = jnp.take(self.adj, safe, axis=0)
+            degs = jnp.where(uniq != INVALID, jnp.take(self.deg, safe), 0)
+            self._vcache, _ = lrbu.fetch_update_values(self._vcache, uniq, slabs, degs)
+            idx0, hit = lrbu.probe_indices(self._vcache, flat)
+            tab0 = self._vcache.values.reshape(-1, self.d_pad)
+            idx0 = idx0.reshape(vids.shape)
+            sel = hit.reshape(vids.shape)
+        else:
+            tab0 = self.adj[:1]
+            idx0 = jnp.zeros_like(idx1)
+            sel = jnp.zeros(vids.shape, bool)
+        idx = jnp.stack([idx0, idx1])
+        return tab0, self.adj, idx, sel.astype(jnp.int32), ok.astype(jnp.int32)
 
     # -- push accounting for wco-push extends (BiGJoin-style plans) -----------
 

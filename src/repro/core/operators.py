@@ -44,6 +44,22 @@ def compact(rows: jax.Array, mask: jax.Array, out_cap: int) -> Tuple[jax.Array, 
     return out, n
 
 
+@jax.jit
+def dedup_pad(vids: jax.Array) -> jax.Array:
+    """Unique valid vertex ids packed to the front, INVALID-padded to the input
+    length (the merged-RPC dedup; also the precondition of the LRBU value-cache
+    insert, whose scatters would race on duplicate keys)."""
+    n = vids.shape[0]
+    v = jnp.where((vids >= 0) & (vids != INVALID), vids, INVALID)
+    s = jnp.sort(v)
+    keep = (s != INVALID) & jnp.concatenate(
+        [jnp.ones((1,), bool), s[1:] != s[:-1]]
+    )
+    pos = jnp.cumsum(keep) - 1
+    tgt = jnp.where(keep, pos, n)
+    return jnp.full((n,), INVALID, jnp.int32).at[tgt].set(s, mode="drop")
+
+
 def lexsort_rows(cols: jax.Array) -> jax.Array:
     """Stable lexicographic argsort by columns of ``cols[N, C]`` (col 0 primary)."""
     n = cols.shape[0]
@@ -220,6 +236,72 @@ def verify_batch(
 
 
 # ---------------------------------------------------------------------------
+# Fused hot path (DESIGN.md §Fused-hot-path): the cache-probe / fetch-table
+# addressing is computed by the engines as a tiny [B, E] prologue; slab
+# movement, Eq.-2 intersection, injectivity and symmetry-order filters run in
+# one kernel pass (or its ref twin). Expansion and compaction stay out here —
+# they are scatter-shaped and gain nothing from fusion.
+# ---------------------------------------------------------------------------
+
+@functools.partial(
+    jax.jit, static_argnames=("lt", "gt", "out_cap", "force_kernel")
+)
+def fused_extend_batch(
+    tab0: jax.Array,   # int32[R0, D] probe source (cache slabs / fetched table)
+    tab1: jax.Array,   # int32[R1, D] fallback (local padded adjacency)
+    idx: jax.Array,    # int32[2, B, E]
+    sel: jax.Array,    # int32[B, E]
+    ok: jax.Array,     # int32[B, E]
+    rows: jax.Array,   # int32[B, K]
+    n: jax.Array,
+    lt: Tuple[int, ...],
+    gt: Tuple[int, ...],
+    out_cap: int,
+    force_kernel: bool = False,
+):
+    from repro.kernels.intersect import ops as ik
+
+    b, k = rows.shape
+    valid_row = jnp.arange(b) < n
+    cands, mask = ik.fused_extend(
+        tab0, tab1, idx, sel, ok, rows, lt=lt, gt=gt, force_kernel=force_kernel
+    )
+    mask = mask & valid_row[:, None]
+    d = cands.shape[1]
+    expanded = jnp.concatenate(
+        [
+            jnp.broadcast_to(rows[:, None, :], (b, d, k)),
+            cands[:, :, None],
+        ],
+        axis=2,
+    ).reshape(b * d, k + 1)
+    return compact(expanded, mask.reshape(b * d), out_cap)
+
+
+@functools.partial(jax.jit, static_argnames=("vpos", "out_cap", "force_kernel"))
+def fused_verify_batch(
+    tab0: jax.Array,
+    tab1: jax.Array,
+    idx: jax.Array,
+    sel: jax.Array,
+    ok: jax.Array,
+    rows: jax.Array,
+    n: jax.Array,
+    vpos: int,
+    out_cap: int,
+    force_kernel: bool = False,
+):
+    from repro.kernels.intersect import ops as ik
+
+    b = rows.shape[0]
+    valid_row = jnp.arange(b) < n
+    keep = ik.fused_verify(
+        tab0, tab1, idx, sel, ok, rows, vpos=vpos, force_kernel=force_kernel
+    )
+    return compact(rows, keep & valid_row, out_cap)
+
+
+# ---------------------------------------------------------------------------
 # PUSH-JOIN — buffered distributed hash join (§4.3). The left side is sorted
 # by key once (the paper's external merge sort of the buffered branch); right
 # batches then probe it with a vectorised lexicographic binary search and the
@@ -237,46 +319,19 @@ def join_prepare(lbuf: jax.Array, ln: jax.Array, key_cols: Tuple[int, ...]):
     return jnp.take(keys, order, axis=0), jnp.take(lbuf, order, axis=0)
 
 
-def _lex_cmp(lrows: jax.Array, r: jax.Array):
-    """Lexicographic comparison: returns (lt, eq) of lrows[i] vs r[i]."""
-    neq = lrows != r
-    first = jnp.argmax(neq, axis=-1)
-    any_neq = jnp.any(neq, axis=-1)
-    val_l = jnp.take_along_axis(lrows, first[..., None], axis=-1)[..., 0]
-    val_r = jnp.take_along_axis(r, first[..., None], axis=-1)[..., 0]
-    lt = any_neq & (val_l < val_r)
-    return lt, ~any_neq
-
-
-def _lex_bounds(sorted_keys: jax.Array, queries: jax.Array):
-    """Vectorised lower/upper bounds of each query key in the sorted key table."""
-    cap = sorted_keys.shape[0]
-    bq = queries.shape[0]
-    iters = max(1, cap.bit_length())
-
-    def search(upper: bool):
-        lo = jnp.zeros((bq,), jnp.int32)
-        hi = jnp.full((bq,), cap, jnp.int32)
-
-        def body(_, carry):
-            lo, hi = carry
-            mid = (lo + hi) // 2
-            lrows = jnp.take(sorted_keys, jnp.clip(mid, 0, cap - 1), axis=0)
-            lt, eq = _lex_cmp(lrows, queries)
-            go_right = (lt | eq) if upper else lt
-            lo = jnp.where(go_right, mid + 1, lo)
-            hi = jnp.where(go_right, hi, mid)
-            return lo, hi
-
-        lo, hi = lax.fori_loop(0, iters, body, (lo, hi))
-        return lo
-
-    return search(False), search(True)
+# Lexicographic equal-range search lives with the kernels now: the binary-
+# search twin (used here by default) in kernels/intersect/ref.py, the Pallas
+# compare-count kernel in kernels/intersect/intersect.py. Re-exported under
+# the old names for callers/tests that import them from operators.
+from repro.kernels.intersect.ref import _lex_cmp, lex_bounds_ref as _lex_bounds  # noqa: E402
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("key_right", "right_extra", "cross_neq", "cross_lt", "out_cap"),
+    static_argnames=(
+        "key_right", "right_extra", "cross_neq", "cross_lt", "out_cap",
+        "use_kernel", "force_kernel",
+    ),
 )
 def join_probe(
     sorted_keys: jax.Array,   # [CAP, kk] left keys, sorted, INVALID-padded
@@ -288,11 +343,18 @@ def join_probe(
     cross_neq: Tuple[Tuple[int, int], ...],
     cross_lt: Tuple[Tuple[int, int], ...],
     out_cap: int,
+    use_kernel: bool = False,
+    force_kernel: bool = False,
 ):
     b, kr = rrows.shape
     rvalid = jnp.arange(b) < rn
     rkeys = jnp.where(rvalid[:, None], rrows[:, list(key_right)], INVALID - 1)
-    lo, hi = _lex_bounds(sorted_keys, rkeys)
+    if use_kernel:
+        from repro.kernels.intersect import ops as ik
+
+        lo, hi = ik.lex_bounds(sorted_keys, rkeys, force_kernel=force_kernel)
+    else:
+        lo, hi = _lex_bounds(sorted_keys, rkeys)
     cnt = jnp.where(rvalid, hi - lo, 0)
     off = jnp.cumsum(cnt) - cnt
     total = jnp.sum(cnt)

@@ -1,17 +1,46 @@
-"""Pallas TPU kernel: batched multiway adjacency intersection (paper Eq. 2).
+"""Pallas TPU kernels for the enumeration hot path (paper Eq. 2, Alg. 3-4).
 
-This is HUGE's compute hot spot: for every partial match, test each candidate
-neighbour of the pivot against the (sorted, INVALID-padded) adjacency rows of
-all other extension vertices. The CPU implementation binary-searches; on TPU
-dynamic per-lane gathers are hostile to the VPU, so we *adapt* (per the brief,
-not port): membership is computed as a **tiled compare-any** — the candidate
-lane vector is compared against sublane-broadcast chunks of the other rows,
-reducing with ``|``. This turns Eq. 2 into dense 8x128-lane compares with zero
-gathers, which is exactly what the VPU is built for. Work is O(D²/chunk)
-compares per row instead of O(D log D) scalar searches, but runs at full lane
-width; for the D ≤ 2k adjacency rows HUGE sees, compare-any wins on TPU.
+Three kernels implement the probe-fetch-intersect contract of DESIGN.md
+§Fused-hot-path (the fused twin of the plain-jnp path in core/operators.py):
 
-Layout:
+``multiway_membership_kernel``
+    The bare Eq.-2 membership: for every partial match, test each candidate
+    neighbour of the pivot against the (sorted, INVALID-padded) adjacency rows
+    of all other extension vertices. The CPU implementation binary-searches;
+    on TPU dynamic per-lane gathers are hostile to the VPU, so we *adapt*
+    (per the brief, not port): membership is a **tiled compare-any** — the
+    candidate lane vector is compared against sublane-broadcast chunks of the
+    other rows, reducing with ``|``. Work is O(D²/chunk) compares per row
+    instead of O(D log D) scalar searches, but runs at full lane width; for
+    the D ≤ 2k adjacency rows HUGE sees, compare-any wins on TPU.
+
+``fused_extend_kernel`` / ``fused_verify_kernel``
+    The full extend/verify hot path in one pass: per (row, extension-vertex)
+    pair, gather the adjacency slab from one of *two* source tables — the
+    LRBU value cache (single-device engine) or the fetched remote table
+    (distributed engine) vs the local adjacency — select by the probe's
+    hit mask, then run the Eq.-2 intersection plus injectivity and
+    symmetry-break filters without materialising ``[B, E, D]`` slabs in HBM
+    between stages. The gather is expressed through
+    ``PrefetchScalarGridSpec``: slab row indices are scalar-prefetched and
+    drive the BlockSpec index maps, so Pallas streams exactly the addressed
+    slabs through VMEM (double-buffered); the probe's address computation is
+    a tiny [B, E] scalar prologue that stays in jnp (see ops.py).
+
+``lex_bounds_kernel``
+    The PUSH-JOIN probe: equal-range bounds of each right-batch key in the
+    sorted left side buffer. Binary search is again gather-hostile, so the
+    bounds are computed as **tiled compare-count**: stream the sorted keys
+    chunk-wise and count ``keys <lex q`` and ``keys ==lex q`` per query —
+    ``lo = Σ lt``, ``cnt = Σ eq`` — which for a sorted table equals
+    (searchsorted-left, equal-run length). O(CAP·B/lane) dense compares,
+    zero gathers, accumulated across a 2-D grid.
+
+All kernels run under ``interpret=True`` off-TPU so CPU CI executes the
+kernel semantics (grid is scanned, not unrolled); pure-jnp reference twins
+live in ref.py and dispatch in ops.py.
+
+Layout of the bare membership kernel:
   cands  int32[B, D]      candidate vertices (pivot's adjacency rows)
   others int32[B, E, D]   adjacency rows of the other E extension vertices
   out    bool [B, D]      candidate present in *all* E rows
@@ -23,10 +52,12 @@ TILE_B=8, D=2048, E=3 the working set is 8·2048·(1+3)·4 B ≈ 256 KiB ≪ 16 
 from __future__ import annotations
 
 import functools
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.graph.storage import INVALID
 
@@ -67,3 +98,246 @@ def multiway_membership_kernel(cands: jax.Array, others: jax.Array, *, interpret
         out_shape=jax.ShapeDtypeStruct((b, d), jnp.bool_),
         interpret=interpret,
     )(cands, others)
+
+
+# ---------------------------------------------------------------------------
+# Fused extend/verify: probe-select slab gather → Eq.-2 intersection → filters
+# ---------------------------------------------------------------------------
+#
+# Slab addressing contract (shared with ref.py / ops.py):
+#   slab[b, e] = tab0[idx[0, b, e]]  if sel[b, e]
+#              = tab1[idx[1, b, e]]  otherwise,
+#   masked to INVALID where ~ok[b, e].
+# ``tab0`` is the probe's primary source (LRBU value-cache slabs or the
+# fetched remote table), ``tab1`` the fallback (local padded adjacency);
+# both hold sorted, INVALID-padded rows of equal width D. Indices must be
+# pre-clipped to the tables' row counts.
+
+
+def _member_any(cands: jax.Array, row: jax.Array, d: int, chunk: int) -> jax.Array:
+    """Compare-any membership of cands[T, D] in row[T, D] (chunked lanes)."""
+    member = jnp.zeros(cands.shape, dtype=jnp.bool_)
+    for c0 in range(0, d, chunk):
+        blk = row[:, c0 : c0 + chunk]
+        member = member | jnp.any(cands[:, :, None] == blk[:, None, :], axis=2)
+    return member
+
+
+def _fused_extend_kernel_body(
+    sidx_ref, *refs, n_ext: int, k: int, d: int, chunk: int,
+    lt: Tuple[int, ...], gt: Tuple[int, ...],
+):
+    del sidx_ref  # consumed by the BlockSpec index maps
+    t0 = refs[:n_ext]
+    t1 = refs[n_ext : 2 * n_ext]
+    sel_ref, ok_ref, rows_ref = refs[2 * n_ext : 2 * n_ext + 3]
+    cands_ref, mask_ref = refs[2 * n_ext + 3 :]
+
+    def slab(e: int) -> jax.Array:
+        s = jnp.where(sel_ref[0, e] == 1, t0[e][...], t1[e][...])  # [1, D]
+        return jnp.where(ok_ref[0, e] == 1, s, INVALID)
+
+    cands = slab(0)
+    acc = cands != INVALID
+    for e in range(1, n_ext):
+        acc = acc & _member_any(cands, slab(e), d, chunk)
+    rows = rows_ref[...]  # [1, K]
+    # Isomorphism (injectivity) check — Alg. 4 line 19.
+    for col in range(k):
+        acc = acc & (cands != rows[:, col : col + 1])
+    # Symmetry-breaking partial orders.
+    for p in lt:
+        acc = acc & (cands < rows[:, p : p + 1])
+    for p in gt:
+        acc = acc & (cands > rows[:, p : p + 1])
+    cands_ref[...] = cands
+    mask_ref[...] = acc
+
+
+def _slab_grid_spec(b: int, d: int, e: int, k: int) -> pltpu.PrefetchScalarGridSpec:
+    """Grid over rows; slab BlockSpecs gather via the prefetched idx[2, B, E]."""
+
+    def tab_spec(which: int, col: int) -> pl.BlockSpec:
+        return pl.BlockSpec((1, d), lambda i, s, w=which, c=col: (s[w, i, c], 0))
+
+    return pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b,),
+        in_specs=[
+            *(tab_spec(0, c) for c in range(e)),
+            *(tab_spec(1, c) for c in range(e)),
+            pl.BlockSpec((1, e), lambda i, s: (i, 0)),  # sel
+            pl.BlockSpec((1, e), lambda i, s: (i, 0)),  # ok
+            pl.BlockSpec((1, k), lambda i, s: (i, 0)),  # rows
+        ],
+        out_specs=[
+            pl.BlockSpec((1, d), lambda i, s: (i, 0)),
+            pl.BlockSpec((1, d), lambda i, s: (i, 0)),
+        ],
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("lt", "gt", "interpret"))
+def fused_extend_kernel(
+    tab0: jax.Array,   # int32[R0, D] sorted INVALID-padded slabs (probe source)
+    tab1: jax.Array,   # int32[R1, D] fallback slabs (local adjacency)
+    idx: jax.Array,    # int32[2, B, E] pre-clipped row indices into tab0/tab1
+    sel: jax.Array,    # int32[B, E] 1 → tab0, 0 → tab1
+    ok: jax.Array,     # int32[B, E] 0 → slab forced to INVALID
+    rows: jax.Array,   # int32[B, K] partial matches
+    *,
+    lt: Tuple[int, ...] = (),
+    gt: Tuple[int, ...] = (),
+    interpret: bool = False,
+):
+    """Fused PULL-EXTEND hot path. Returns (cands[B, D], mask[B, D]).
+
+    ``cands`` is slab 0 (the pivot's adjacency); ``mask`` marks candidates
+    present in every other slab that also pass injectivity and lt/gt orders.
+    Row validity is NOT applied here — callers AND the batch's valid mask in.
+    """
+    b, k = rows.shape
+    e = idx.shape[2]
+    d = tab0.shape[1]
+    assert tab1.shape[1] == d, (tab0.shape, tab1.shape)
+    kernel = functools.partial(
+        _fused_extend_kernel_body,
+        n_ext=e, k=k, d=d, chunk=min(CHUNK, d), lt=lt, gt=gt,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=_slab_grid_spec(b, d, e, k),
+        out_shape=[
+            jax.ShapeDtypeStruct((b, d), jnp.int32),
+            jax.ShapeDtypeStruct((b, d), jnp.bool_),
+        ],
+        interpret=interpret,
+    )(idx, *([tab0] * e), *([tab1] * e), sel, ok, rows)
+
+
+def _fused_verify_kernel_body(
+    sidx_ref, *refs, n_ext: int, k: int, d: int, chunk: int, vpos: int,
+):
+    del sidx_ref
+    t0 = refs[:n_ext]
+    t1 = refs[n_ext : 2 * n_ext]
+    sel_ref, ok_ref, rows_ref = refs[2 * n_ext : 2 * n_ext + 3]
+    (mask_ref,) = refs[2 * n_ext + 3 :]
+    target = rows_ref[0, vpos]
+    acc = target != INVALID
+    for e in range(n_ext):
+        s = jnp.where(sel_ref[0, e] == 1, t0[e][...], t1[e][...])
+        s = jnp.where(ok_ref[0, e] == 1, s, INVALID)
+        member = jnp.zeros((), jnp.bool_)
+        for c0 in range(0, d, chunk):
+            member = member | jnp.any(s[:, c0 : c0 + chunk] == target)
+        acc = acc & member
+    mask_ref[0, 0] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("vpos", "interpret"))
+def fused_verify_kernel(
+    tab0: jax.Array,
+    tab1: jax.Array,
+    idx: jax.Array,
+    sel: jax.Array,
+    ok: jax.Array,
+    rows: jax.Array,
+    *,
+    vpos: int,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused VERIFY (§5.2 pulling-hash hint): keep rows whose ``rows[:, vpos]``
+    is a member of every gathered slab. Returns bool[B] (row validity NOT
+    applied — callers AND it in, same contract as fused_extend_kernel)."""
+    b, k = rows.shape
+    e = idx.shape[2]
+    d = tab0.shape[1]
+    grid_spec = _slab_grid_spec(b, d, e, k)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b,),
+        in_specs=grid_spec.in_specs,
+        out_specs=[pl.BlockSpec((1, 1), lambda i, s: (i, 0))],
+    )
+    kernel = functools.partial(
+        _fused_verify_kernel_body,
+        n_ext=e, k=k, d=d, chunk=min(CHUNK, d), vpos=vpos,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((b, 1), jnp.bool_)],
+        interpret=interpret,
+    )(idx, *([tab0] * e), *([tab1] * e), sel, ok, rows)
+    return out[0][:, 0]
+
+
+# ---------------------------------------------------------------------------
+# PUSH-JOIN probe: equal-range bounds by tiled compare-count
+# ---------------------------------------------------------------------------
+
+BOUNDS_CHUNK = 128  # sorted-key rows per grid step
+
+
+def _lex_bounds_kernel_body(keys_ref, q_ref, out_ref, *, kk: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    keys = keys_ref[...]  # [C, KK]
+    q = q_ref[...]        # [T, KK]
+    lt = jnp.zeros((q.shape[0], keys.shape[0]), jnp.bool_)
+    eq = jnp.ones((q.shape[0], keys.shape[0]), jnp.bool_)
+    for c in range(kk):
+        a = keys[:, c][None, :]
+        b = q[:, c][:, None]
+        lt = lt | (eq & (a < b))
+        eq = eq & (a == b)
+    out_ref[:, 0] += jnp.sum(lt, axis=1, dtype=jnp.int32)
+    out_ref[:, 1] += jnp.sum(eq, axis=1, dtype=jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def lex_bounds_kernel(
+    sorted_keys: jax.Array,  # int32[CAP, KK] lexicographically sorted, INVALID-padded
+    queries: jax.Array,      # int32[B, KK]
+    *,
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """Equal-range (lo, hi) of each query key in the sorted key table.
+
+    For a sorted table, ``#(keys <lex q)`` is searchsorted-left and
+    ``#(keys ==lex q)`` the run length, so the bounds come out of dense
+    compare-count accumulation over a (query-tile × key-chunk) grid — no
+    per-lane gathers. Queries equal to INVALID rows would miscount, so
+    callers encode invalid queries as INVALID-1 (operators.join_probe does).
+    """
+    cap, kk = sorted_keys.shape
+    b = queries.shape[0]
+    pad_cap = (-cap) % BOUNDS_CHUNK
+    if pad_cap:
+        sorted_keys = jnp.concatenate(
+            [sorted_keys, jnp.full((pad_cap, kk), INVALID, jnp.int32)], axis=0
+        )
+    pad_b = (-b) % TILE_B
+    if pad_b:
+        queries = jnp.concatenate(
+            [queries, jnp.full((pad_b, kk), INVALID, jnp.int32)], axis=0
+        )
+    bp = b + pad_b
+    out = pl.pallas_call(
+        functools.partial(_lex_bounds_kernel_body, kk=kk),
+        grid=((bp // TILE_B), (cap + pad_cap) // BOUNDS_CHUNK),
+        in_specs=[
+            pl.BlockSpec((BOUNDS_CHUNK, kk), lambda i, j: (j, 0)),
+            pl.BlockSpec((TILE_B, kk), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((TILE_B, 2), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bp, 2), jnp.int32),
+        interpret=interpret,
+    )(sorted_keys, queries)
+    lo = out[:b, 0]
+    return lo, lo + out[:b, 1]

@@ -1,26 +1,113 @@
-"""Jitted public wrapper for the intersect kernel with CPU fallback.
+"""Jitted public wrappers for the intersect kernels with CPU fallback.
 
-The Pallas TPU kernel only lowers on TPU backends; everywhere else (this CI
+The Pallas TPU kernels only lower on TPU backends; everywhere else (this CI
 box) we execute either the pure-jnp oracle (fast XLA path) or the kernel in
 ``interpret=True`` mode (tests do the latter to validate kernel semantics).
+
+Dispatch policy, uniform across all entry points:
+  1. on TPU             → native Pallas kernel (batch padded to tile multiples)
+  2. ``force_kernel``   → Pallas kernel under interpret=True (CPU CI parity)
+  3. otherwise          → pure-jnp reference twin
 """
 from __future__ import annotations
 
-import jax
+from typing import Tuple
 
-from repro.kernels.intersect.intersect import multiway_membership_kernel, TILE_B
-from repro.kernels.intersect.ref import multiway_membership_ref
+import jax
+import jax.numpy as jnp
+
+from repro.graph.storage import INVALID
+from repro.kernels.intersect.intersect import (
+    TILE_B,
+    fused_extend_kernel,
+    fused_verify_kernel,
+    lex_bounds_kernel,
+    multiway_membership_kernel,
+)
+from repro.kernels.intersect.ref import (
+    fused_extend_ref,
+    fused_verify_ref,
+    lex_bounds_ref,
+    multiway_membership_ref,
+)
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def _pad_rows(x: jax.Array, n: int, fill) -> jax.Array:
+    """Pad axis 0 with ``n`` rows of ``fill`` (no-op when n == 0)."""
+    if n == 0:
+        return x
+    pad = jnp.full((n,) + x.shape[1:], fill, x.dtype)
+    return jnp.concatenate([x, pad], axis=0)
+
+
 def multiway_membership(cands: jax.Array, others: jax.Array, *, force_kernel: bool = False) -> jax.Array:
     """Batched Eq.-2 membership: cands[B, D] ∈ ∩ others[B, E, D]."""
     b = cands.shape[0]
-    if (_on_tpu() and b % TILE_B == 0):
-        return multiway_membership_kernel(cands, others)
-    if force_kernel:
-        return multiway_membership_kernel(cands, others, interpret=True)
+    if _on_tpu() or force_kernel:
+        # Pad the batch to the next TILE_B multiple; INVALID candidate rows
+        # produce all-False membership, so the pad is inert and sliced off.
+        pad = (-b) % TILE_B
+        out = multiway_membership_kernel(
+            _pad_rows(cands, pad, INVALID),
+            _pad_rows(others, pad, INVALID),
+            interpret=not _on_tpu(),
+        )
+        return out[:b]
     return multiway_membership_ref(cands, others)
+
+
+def fused_extend(
+    tab0: jax.Array,
+    tab1: jax.Array,
+    idx: jax.Array,
+    sel: jax.Array,
+    ok: jax.Array,
+    rows: jax.Array,
+    *,
+    lt: Tuple[int, ...] = (),
+    gt: Tuple[int, ...] = (),
+    force_kernel: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """Fused probe-select slab gather → multiway intersect → injectivity/order
+    filters. Returns (cands[B, D], mask[B, D]); see fused_extend_kernel."""
+    if _on_tpu() or force_kernel:
+        return fused_extend_kernel(
+            tab0, tab1, idx, sel, ok, rows,
+            lt=lt, gt=gt, interpret=not _on_tpu(),
+        )
+    return fused_extend_ref(tab0, tab1, idx, sel, ok, rows, lt=lt, gt=gt)
+
+
+def fused_verify(
+    tab0: jax.Array,
+    tab1: jax.Array,
+    idx: jax.Array,
+    sel: jax.Array,
+    ok: jax.Array,
+    rows: jax.Array,
+    *,
+    vpos: int,
+    force_kernel: bool = False,
+) -> jax.Array:
+    """Fused VERIFY membership of rows[:, vpos] across all gathered slabs."""
+    if _on_tpu() or force_kernel:
+        return fused_verify_kernel(
+            tab0, tab1, idx, sel, ok, rows, vpos=vpos, interpret=not _on_tpu()
+        )
+    return fused_verify_ref(tab0, tab1, idx, sel, ok, rows, vpos=vpos)
+
+
+def lex_bounds(
+    sorted_keys: jax.Array,
+    queries: jax.Array,
+    *,
+    force_kernel: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """Equal-range (lo, hi) of queries[B, KK] in sorted_keys[CAP, KK]."""
+    if _on_tpu() or force_kernel:
+        return lex_bounds_kernel(sorted_keys, queries, interpret=not _on_tpu())
+    return lex_bounds_ref(sorted_keys, queries)

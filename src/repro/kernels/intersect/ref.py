@@ -1,8 +1,12 @@
-"""Pure-jnp oracle for the intersect kernel (binary-search membership)."""
+"""Pure-jnp oracles for the intersect kernels (binary-search membership,
+slab-gathered fused extend/verify, lexicographic equal-range bounds)."""
 from __future__ import annotations
+
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
+from jax import lax
 
 from repro.graph.storage import INVALID
 
@@ -20,3 +24,98 @@ def multiway_membership_ref(cands: jax.Array, others: jax.Array) -> jax.Array:
         found = jnp.take_along_axis(row, idx, axis=-1)
         acc = acc & (found == cands)
     return acc
+
+
+def gather_slabs(
+    tab0: jax.Array, tab1: jax.Array, idx: jax.Array, sel: jax.Array, ok: jax.Array
+) -> jax.Array:
+    """Materialise the [B, E, D] slab tensor of the fused-kernel contract:
+    slab[b, e] = (tab0 if sel else tab1)[idx[·, b, e]], INVALID where ~ok."""
+    s0 = jnp.take(tab0, idx[0], axis=0)  # [B, E, D]
+    s1 = jnp.take(tab1, idx[1], axis=0)
+    slabs = jnp.where((sel == 1)[:, :, None], s0, s1)
+    return jnp.where((ok == 1)[:, :, None], slabs, INVALID)
+
+
+def fused_extend_ref(
+    tab0: jax.Array,
+    tab1: jax.Array,
+    idx: jax.Array,
+    sel: jax.Array,
+    ok: jax.Array,
+    rows: jax.Array,
+    *,
+    lt: Tuple[int, ...] = (),
+    gt: Tuple[int, ...] = (),
+) -> Tuple[jax.Array, jax.Array]:
+    """Reference twin of fused_extend_kernel: returns (cands[B, D], mask[B, D])."""
+    slabs = gather_slabs(tab0, tab1, idx, sel, ok)
+    cands = slabs[:, 0, :]
+    mask = multiway_membership_ref(cands, slabs[:, 1:, :]) if slabs.shape[1] > 1 \
+        else (cands != INVALID)
+    k = rows.shape[1]
+    for col in range(k):
+        mask = mask & (cands != rows[:, col : col + 1])
+    for p in lt:
+        mask = mask & (cands < rows[:, p : p + 1])
+    for p in gt:
+        mask = mask & (cands > rows[:, p : p + 1])
+    return cands, mask
+
+
+def fused_verify_ref(
+    tab0: jax.Array,
+    tab1: jax.Array,
+    idx: jax.Array,
+    sel: jax.Array,
+    ok: jax.Array,
+    rows: jax.Array,
+    *,
+    vpos: int,
+) -> jax.Array:
+    """Reference twin of fused_verify_kernel: bool[B], rows[:, vpos] present in
+    every gathered slab."""
+    slabs = gather_slabs(tab0, tab1, idx, sel, ok)
+    target = rows[:, vpos]
+    acc = target != INVALID
+    for e in range(slabs.shape[1]):
+        acc = acc & jnp.any(slabs[:, e, :] == target[:, None], axis=1)
+    return acc
+
+
+def _lex_cmp(lrows: jax.Array, r: jax.Array):
+    """Lexicographic comparison: returns (lt, eq) of lrows[i] vs r[i]."""
+    neq = lrows != r
+    first = jnp.argmax(neq, axis=-1)
+    any_neq = jnp.any(neq, axis=-1)
+    val_l = jnp.take_along_axis(lrows, first[..., None], axis=-1)[..., 0]
+    val_r = jnp.take_along_axis(r, first[..., None], axis=-1)[..., 0]
+    lt = any_neq & (val_l < val_r)
+    return lt, ~any_neq
+
+
+def lex_bounds_ref(sorted_keys: jax.Array, queries: jax.Array):
+    """Vectorised lower/upper bounds of each query key in the sorted key table
+    (binary search — the pure-jnp twin of lex_bounds_kernel)."""
+    cap = sorted_keys.shape[0]
+    bq = queries.shape[0]
+    iters = max(1, cap.bit_length())
+
+    def search(upper: bool):
+        lo = jnp.zeros((bq,), jnp.int32)
+        hi = jnp.full((bq,), cap, jnp.int32)
+
+        def body(_, carry):
+            lo, hi = carry
+            mid = (lo + hi) // 2
+            lrows = jnp.take(sorted_keys, jnp.clip(mid, 0, cap - 1), axis=0)
+            lt, eq = _lex_cmp(lrows, queries)
+            go_right = (lt | eq) if upper else lt
+            lo = jnp.where(go_right, mid + 1, lo)
+            hi = jnp.where(go_right, hi, mid)
+            return lo, hi
+
+        lo, hi = lax.fori_loop(0, iters, body, (lo, hi))
+        return lo
+
+    return search(False), search(True)

@@ -97,6 +97,41 @@ def test_distributed_push_join_hybrid_plans():
     assert out.count("ok") == 4
 
 
+def test_distributed_fused_hot_path_matches_unfused():
+    """The fused extend/verify and probe kernels inside the shard_map engine
+    produce counts identical to the unfused collectives path and the oracle —
+    ref twins at scale, plus a small interpret-mode (force_kernel) run that
+    executes real Pallas kernel semantics inside shard_map."""
+    out = run_py("""
+        import jax
+        from repro.graph import powerlaw_graph, ring_of_cliques
+        from repro.graph.oracle import count_instances
+        from repro.core import query as Q
+        from repro.core.distributed import DistributedEngine, DistConfig
+        mesh = jax.make_mesh((4,), ("shards",))
+        pl = powerlaw_graph(240, 5.0, seed=3)
+        for qname, space in (("q1", "huge"), ("q2", "seed"), ("q7", "huge")):
+            q = Q.PAPER_QUERIES[qname]
+            oracle = count_instances(pl, list(q.edges))
+            base, _ = DistributedEngine(pl, mesh, DistConfig(
+                batch_size=128, queue_capacity=1 << 14)).run(q, space=space)
+            fused, _ = DistributedEngine(pl, mesh, DistConfig(
+                batch_size=128, queue_capacity=1 << 14, fused=True)).run(q, space=space)
+            assert base == fused == oracle, (qname, space, base, fused, oracle)
+            print(qname, space, "ok", fused)
+        # interpret-mode kernels inside shard_map on a tiny clique graph
+        cl = ring_of_cliques(4, 5)
+        q = Q.PAPER_QUERIES["q2"]
+        oracle = count_instances(cl, list(q.edges))
+        fused, _ = DistributedEngine(cl, mesh, DistConfig(
+            batch_size=16, queue_capacity=1 << 10, join_buffer_capacity=1 << 9,
+            join_out_capacity=1 << 10, fused=True, force_kernel=True)).run(q)
+        assert fused == oracle, (fused, oracle)
+        print("interpret ok", fused)
+    """, devices=4)
+    assert out.count("ok") == 4
+
+
 def test_moe_push_pull_equivalence_multidevice():
     """HUGE's core claim for the LM substrate: push and pull modes are the
     same logical join — identical outputs, different collectives."""

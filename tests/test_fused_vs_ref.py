@@ -1,0 +1,135 @@
+"""Differential harness for the fused hot path (DESIGN.md §Fused-hot-path).
+
+The same optimiser plans run through the fused and unfused engines on random
+power-law and clique-heavy graphs; both must agree *exactly* with the
+networkx oracle. Counts are integers, so any kernel-semantics divergence —
+padding, INVALID handling, order filters, cache addressing — shows up as an
+off-by-N, not a tolerance question.
+
+Set ``REPRO_FORCE_KERNEL=1`` to run the fused engine's Pallas kernels in
+interpret mode (the CI kernel leg does); by default the fused engine uses the
+pure-jnp ref twins, which exercise the same fused dataflow at XLA speed.
+"""
+import os
+
+import pytest
+
+try:
+    from hypothesis import HealthCheck, given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # deterministic tests below still run
+    HAVE_HYPOTHESIS = False
+
+from repro.core import query as Q
+from repro.core.engine import EngineConfig, HugeEngine
+from repro.graph.generators import powerlaw_graph, ring_of_cliques
+from repro.graph.oracle import count_instances
+
+FORCE_KERNEL = os.environ.get("REPRO_FORCE_KERNEL", "0") == "1"
+
+# Small capacities keep interpret-mode grids short; batch sizes are chosen to
+# produce remainder tiles (B % TILE_B != 0 inside padded kernel dispatch).
+_CFG = dict(
+    batch_size=32,
+    queue_capacity=1 << 12,
+    join_buffer_capacity=1 << 11,
+    join_out_capacity=1 << 12,
+    cache_capacity=128,
+    num_machines=3,
+)
+
+
+def _counts(graph, query, space):
+    base = HugeEngine(graph, EngineConfig(**_CFG)).run(query, space=space).count
+    fused = HugeEngine(
+        graph, EngineConfig(**_CFG, fused=True, force_kernel=FORCE_KERNEL)
+    ).run(query, space=space).count
+    return base, fused
+
+
+if HAVE_HYPOTHESIS:
+    SLOW = dict(deadline=None, suppress_health_check=list(HealthCheck))
+
+    @st.composite
+    def powerlaw(draw):
+        n = draw(st.integers(16, 48))
+        deg = draw(st.floats(2.0, 6.0))
+        seed = draw(st.integers(0, 1 << 16))
+        return powerlaw_graph(n, deg, seed=seed)
+
+    @st.composite
+    def clique_heavy(draw):
+        return ring_of_cliques(draw(st.integers(2, 5)), draw(st.integers(3, 6)))
+
+    @settings(max_examples=3 if FORCE_KERNEL else 12, **SLOW)
+    @given(powerlaw(), st.sampled_from(["triangle", "q1", "q2"]))
+    def test_fused_matches_unfused_and_oracle_powerlaw(graph, qname):
+        query = Q.PAPER_QUERIES.get(qname) or getattr(Q, qname)()
+        oracle = count_instances(graph, list(query.edges))
+        for space in ("huge", "seed", "bigjoin"):
+            base, fused = _counts(graph, query, space)
+            assert base == fused == oracle, (qname, space, base, fused, oracle)
+
+    @settings(max_examples=2 if FORCE_KERNEL else 8, **SLOW)
+    @given(clique_heavy(), st.sampled_from(["triangle", "q2", "q3"]))
+    def test_fused_matches_unfused_and_oracle_cliques(graph, qname):
+        """Clique-heavy graphs stress the multiway intersection (dense
+        adjacency overlap) and the symmetry-breaking orders (many automorphic
+        embeddings)."""
+        query = Q.PAPER_QUERIES.get(qname) or getattr(Q, qname)()
+        oracle = count_instances(graph, list(query.edges))
+        for space in ("huge", "seed"):
+            base, fused = _counts(graph, query, space)
+            assert base == fused == oracle, (qname, space, base, fused, oracle)
+
+
+# Deterministic fixed-seed differential sweep — the harness's always-on core,
+# independent of hypothesis availability.
+@pytest.mark.parametrize("seed,qname,space", [
+    (3, "triangle", "huge"),
+    (7, "q1", "huge"),
+    (11, "q2", "seed"),
+    (19, "q1", "bigjoin"),
+])
+def test_fused_matches_unfused_and_oracle_fixed(seed, qname, space):
+    graph = powerlaw_graph(40, 5.0, seed=seed)
+    query = Q.PAPER_QUERIES.get(qname) or getattr(Q, qname)()
+    oracle = count_instances(graph, list(query.edges))
+    base, fused = _counts(graph, query, space)
+    assert base == fused == oracle, (qname, space, base, fused, oracle)
+
+
+@pytest.mark.parametrize("nc,cs,qname", [(3, 4, "triangle"), (4, 5, "q2")])
+def test_fused_matches_oracle_cliques_fixed(nc, cs, qname):
+    graph = ring_of_cliques(nc, cs)
+    query = Q.PAPER_QUERIES.get(qname) or getattr(Q, qname)()
+    oracle = count_instances(graph, list(query.edges))
+    base, fused = _counts(graph, query, "huge")
+    assert base == fused == oracle, (qname, base, fused, oracle)
+
+
+def test_fused_interpret_kernels_exact():
+    """Deterministic always-on interpret-mode check (independent of the env
+    flag): the full fused kernel path must reproduce the oracle count."""
+    graph = powerlaw_graph(1 << 5, 4.0, seed=1)
+    query = Q.PAPER_QUERIES["q2"]
+    oracle = count_instances(graph, list(query.edges))
+    cfg = EngineConfig(**{**_CFG, "join_buffer_capacity": 1 << 10})
+    got = HugeEngine(
+        graph,
+        EngineConfig(**{**_CFG, "join_buffer_capacity": 1 << 10},
+                     fused=True, force_kernel=True),
+    ).run(query).count
+    base = HugeEngine(graph, cfg).run(query).count
+    assert got == base == oracle
+
+
+def test_fused_value_cache_reuse_still_exact():
+    """Back-to-back batches re-hit the LRBU value cache; counts must not
+    drift as slabs start being served from the cache instead of the graph."""
+    graph = ring_of_cliques(4, 5)
+    query = Q.triangle()
+    oracle = count_instances(graph, list(query.edges))
+    eng = HugeEngine(graph, EngineConfig(**_CFG, fused=True))
+    assert eng.run(query).count == oracle

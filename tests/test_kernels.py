@@ -6,8 +6,19 @@ import numpy as np
 import pytest
 
 from repro.graph.storage import INVALID
-from repro.kernels.intersect.intersect import multiway_membership_kernel
-from repro.kernels.intersect.ref import multiway_membership_ref
+from repro.kernels.intersect import ops as intersect_ops
+from repro.kernels.intersect.intersect import (
+    fused_extend_kernel,
+    fused_verify_kernel,
+    lex_bounds_kernel,
+    multiway_membership_kernel,
+)
+from repro.kernels.intersect.ref import (
+    fused_extend_ref,
+    fused_verify_ref,
+    lex_bounds_ref,
+    multiway_membership_ref,
+)
 from repro.kernels.flash_attention.flash_attention import flash_attention_kernel
 from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.flash_attention.ops import attention_chunked
@@ -37,6 +48,82 @@ def test_intersect_kernel_matches_ref(shape):
     ref = multiway_membership_ref(jnp.asarray(cands), jnp.asarray(others))
     ker = multiway_membership_kernel(jnp.asarray(cands), jnp.asarray(others), interpret=True)
     assert bool(jnp.all(ref == ker))
+
+
+@pytest.mark.parametrize("b", [1, 3, 7, 9, 13, 17, 23])
+def test_intersect_dispatch_pads_remainder_batches(b):
+    """B % TILE_B != 0 must run through the padded kernel (force_kernel) and
+    match the ref — the silent ref fallback regression."""
+    e, d = 2, 128
+    others = _sorted_rows(b, e, d)
+    cands = RNG.integers(0, 500, size=(b, d)).astype(np.int32)
+    cands[RNG.random((b, d)) < 0.2] = INVALID
+    ref = multiway_membership_ref(jnp.asarray(cands), jnp.asarray(others))
+    ker = intersect_ops.multiway_membership(
+        jnp.asarray(cands), jnp.asarray(others), force_kernel=True
+    )
+    assert ker.shape == (b, d)
+    assert bool(jnp.all(ref == ker))
+
+
+def _slab_table(r, d, vmax=300):
+    t = np.full((r, d), INVALID, np.int32)
+    for i in range(r):
+        k = RNG.integers(1, d)
+        vals = np.unique(RNG.integers(0, vmax, size=k)).astype(np.int32)
+        t[i, : len(vals)] = vals
+    return jnp.asarray(t)
+
+
+def _fused_inputs(b, e, k, d, r0, r1):
+    tab0, tab1 = _slab_table(r0, d), _slab_table(r1, d)
+    idx = jnp.asarray(
+        np.stack([RNG.integers(0, r0, (b, e)), RNG.integers(0, r1, (b, e))]).astype(np.int32)
+    )
+    sel = jnp.asarray(RNG.integers(0, 2, (b, e)).astype(np.int32))
+    ok = jnp.asarray((RNG.random((b, e)) < 0.85).astype(np.int32))
+    rows = jnp.asarray(RNG.integers(0, 300, (b, k)).astype(np.int32))
+    return tab0, tab1, idx, sel, ok, rows
+
+
+@pytest.mark.parametrize("b,e,k,lt,gt", [
+    (6, 1, 2, (), ()),
+    (8, 2, 3, (1,), ()),
+    (11, 3, 4, (0,), (2,)),
+])
+def test_fused_extend_kernel_matches_ref(b, e, k, lt, gt):
+    tab0, tab1, idx, sel, ok, rows = _fused_inputs(b, e, k, 128, 29, 41)
+    c_ref, m_ref = fused_extend_ref(tab0, tab1, idx, sel, ok, rows, lt=lt, gt=gt)
+    c_ker, m_ker = fused_extend_kernel(
+        tab0, tab1, idx, sel, ok, rows, lt=lt, gt=gt, interpret=True
+    )
+    assert bool(jnp.all(c_ref == c_ker))
+    assert bool(jnp.all(m_ref == m_ker))
+
+
+@pytest.mark.parametrize("b,e,k,vpos", [(5, 1, 3, 0), (9, 2, 4, 2), (8, 3, 3, 1)])
+def test_fused_verify_kernel_matches_ref(b, e, k, vpos):
+    tab0, tab1, idx, sel, ok, rows = _fused_inputs(b, e, k, 128, 23, 31)
+    # make some targets actual members so the True branch is exercised
+    rows = rows.at[0, vpos].set(int(tab0[int(idx[0, 0, 0]), 0]))
+    ref = fused_verify_ref(tab0, tab1, idx, sel, ok, rows, vpos=vpos)
+    ker = fused_verify_kernel(tab0, tab1, idx, sel, ok, rows, vpos=vpos, interpret=True)
+    assert bool(jnp.all(ref == ker))
+
+
+@pytest.mark.parametrize("cap,kk,bq", [(64, 1, 7), (200, 2, 17), (384, 3, 8)])
+def test_lex_bounds_kernel_matches_ref(cap, kk, bq):
+    nk = int(cap * 0.8)
+    keys = np.full((cap, kk), INVALID, np.int32)
+    filled = RNG.integers(0, 30, (nk, kk)).astype(np.int32)
+    keys[:nk] = filled[np.lexsort(filled[:, ::-1].T)]
+    q = RNG.integers(0, 30, (bq, kk)).astype(np.int32)
+    q[RNG.random(bq) < 0.25] = INVALID - 1  # the invalid-query convention
+    keys, q = jnp.asarray(keys), jnp.asarray(q)
+    lo_r, hi_r = lex_bounds_ref(keys, q)
+    lo_k, hi_k = lex_bounds_kernel(keys, q, interpret=True)
+    np.testing.assert_array_equal(np.asarray(lo_r), np.asarray(lo_k))
+    np.testing.assert_array_equal(np.asarray(hi_r), np.asarray(hi_k))
 
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])

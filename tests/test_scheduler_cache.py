@@ -90,6 +90,68 @@ def test_lrbu_evicts_least_recent_batch():
     assert bool(hit[0]) and bool(hit[1]) and not bool(hit[2])
 
 
+def test_lrbu_seal_protects_current_batch_hits_from_eviction():
+    """Seal contract: an entry hit in the current batch has its epoch bumped
+    to current_epoch, so a same-batch insert into the full set must evict the
+    *other* (unsealed) way — never the sealed one."""
+    state = lrbu.make_cache(8, ways=2)  # 4 sets × 2 ways
+    pad = lambda xs: jnp.asarray(xs + [INVALID] * (4 - len(xs)), jnp.int32)
+    state, _ = lrbu.fetch_update(state, pad([0, 4]))   # set 0 now full: {0, 4}
+    state, hit = lrbu.fetch_update(state, pad([0, 8])) # hit-seal 0, insert 8
+    assert bool(hit[0]) and not bool(hit[1])
+    keys0 = set(np.asarray(state.keys[0]).tolist())
+    assert 0 in keys0, "sealed entry was evicted within its own batch"
+    assert 8 in keys0 and 4 not in keys0, "victim must be the unsealed way"
+
+
+def test_lrbu_release_advances_epochs_monotonically():
+    """Release contract: every fetch_update call ends with Release() —
+    current_epoch strictly increases, and entries sealed in batch t carry
+    exactly epoch t (the ordered-set bookkeeping of Alg. 3)."""
+    state = lrbu.make_cache(8, ways=2)
+    pad = lambda xs: jnp.asarray(xs + [INVALID] * (4 - len(xs)), jnp.int32)
+    seen = [int(state.current_epoch)]
+    for t in range(5):
+        epoch_at_insert = int(state.current_epoch)
+        state, _ = lrbu.fetch_update(state, pad([t]))
+        seen.append(int(state.current_epoch))
+        sets, way, hit = lrbu._locate(state, pad([t]))
+        assert bool(hit[0])
+        assert int(state.epoch[int(sets[0]), int(way[0])]) == epoch_at_insert
+    assert all(b == a + 1 for a, b in zip(seen, seen[1:])), seen
+
+
+def test_value_cache_probe_byte_identical_to_storage_fetch():
+    """The fused kernel's probe (probe_indices + values table) must serve
+    slabs byte-identical to a direct PaddedAdjacency fetch from storage."""
+    from repro.graph.generators import powerlaw_graph
+
+    g = powerlaw_graph(64, 4.0, seed=5)
+    d_pad = g.padded.d_pad
+    state = lrbu.make_cache(64, ways=4, d_pad=d_pad)
+    vids = jnp.asarray([1, 5, 9, 13, 21, 40, INVALID, INVALID], jnp.int32)
+    direct_rows, direct_degs = g.padded.neighbors(vids)
+    state, _ = lrbu.fetch_update_values(state, vids, direct_rows, direct_degs)
+
+    idx, hit = lrbu.probe_indices(state, vids)
+    flat_values = np.asarray(state.values.reshape(-1, d_pad))
+    valid = np.asarray(vids) != INVALID
+    assert bool(jnp.all(hit[:6])), "fresh inserts must probe as hits"
+    for i in np.flatnonzero(valid & np.asarray(hit)):
+        np.testing.assert_array_equal(
+            flat_values[int(idx[i])], np.asarray(direct_rows[i]),
+            err_msg=f"slab for vid {int(vids[i])} differs from storage fetch",
+        )
+    # and the higher-level lookup agrees too
+    got_rows, got_degs, got_hit = lrbu.cache_lookup_values(state, vids)
+    np.testing.assert_array_equal(
+        np.asarray(got_rows[:6]), np.asarray(direct_rows[:6])
+    )
+    np.testing.assert_array_equal(
+        np.asarray(got_degs[:6]), np.asarray(direct_degs[:6])
+    )
+
+
 def test_value_cache_roundtrip():
     state = lrbu.make_cache(16, ways=2, d_pad=8)
     vids = jnp.asarray([3, 7, INVALID, INVALID], jnp.int32)
