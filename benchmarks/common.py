@@ -1,8 +1,10 @@
 """Shared benchmark fixtures: graphs, queries, engine runners, CSV output."""
 from __future__ import annotations
 
+import functools
 import json
 import os
+import subprocess
 import time
 from typing import Dict, List, Optional
 
@@ -64,22 +66,37 @@ def emit(name: str, us_per_call: float, derived: str):
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
+@functools.lru_cache(maxsize=1)
+def git_rev() -> str:
+    """Short git revision of the repo (``unknown`` outside a checkout)."""
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=REPO_ROOT, capture_output=True, text=True, timeout=10,
+        )
+        rev = out.stdout.strip()
+        return rev if out.returncode == 0 and rev else "unknown"
+    except OSError:
+        return "unknown"
+
+
 def record_bench(name: str, entries: List[dict]) -> str:
     """Append trajectory points to ``BENCH_<name>.json`` at the repo root.
 
     Entry format (EXPERIMENTS.md §Perf): each point carries ``suite``,
     ``case``, ``mode``, ``matches``, ``wall_s``, ``matches_per_s``; this
-    helper stamps ``recorded`` (date) so successive PRs accumulate a
-    regression trajectory instead of overwriting it."""
+    helper stamps ``recorded`` (ISO-8601 timestamp) and ``git`` (short rev)
+    so successive PRs accumulate an *attributable* regression trajectory
+    instead of overwriting it."""
     path = os.path.join(REPO_ROOT, f"BENCH_{name}.json")
     doc = {"bench": name, "entries": []}
     if os.path.exists(path):
         with open(path) as f:
             doc = json.load(f)
-    stamp = time.strftime("%Y-%m-%d")
+    stamp = time.strftime("%Y-%m-%dT%H:%M:%S%z")
     doc["updated"] = stamp
     doc.setdefault("entries", []).extend(
-        [dict(e, recorded=stamp) for e in entries]
+        [dict(e, recorded=stamp, git=git_rev()) for e in entries]
     )
     with open(path, "w") as f:
         json.dump(doc, f, indent=2)

@@ -1,0 +1,128 @@
+"""Service-load benchmark: multi-tenant graph service under mixed q1–q3 traffic.
+
+The ROADMAP serving item made concrete: T tenants each submit R enumeration
+requests (round-robin over q1=square, q2=diamond, q3=4-clique) to ONE
+``GraphService`` sharing one engine; the driver ticks the service to idle and
+reports per-request latency percentiles (p50/p99, stamped per request from
+submit to finish) plus aggregate matches/sec. Results append to
+``BENCH_service.json`` via ``common.record_bench`` (EXPERIMENTS.md
+§Service-load).
+
+  PYTHONPATH=src python -m benchmarks.exp_service_load             # default load
+  PYTHONPATH=src python -m benchmarks.exp_service_load --smoke     # CI: 2 tenants, tiny graph
+
+A warmup pass (same workload, discarded) runs first so the percentiles
+measure steady-state serving, not jit compilation; ``--no-warmup`` skips it
+(compile time then lands in the first requests' latencies).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from benchmarks.common import bench_graph, emit, record_bench
+from repro.core.engine import EngineConfig
+from repro.serve.graph_service import (
+    DONE,
+    GraphQueryRequest,
+    GraphService,
+    ServiceConfig,
+)
+
+MIX = ("q1", "q2", "q3")
+
+
+def build_service(graph, max_active: int, tick_steps: int) -> GraphService:
+    return GraphService(
+        graph,
+        ServiceConfig(
+            max_active=max_active,
+            tick_steps=tick_steps,
+            queue_capacity=1 << 12,
+            join_buffer_capacity=1 << 14,
+        ),
+        EngineConfig(batch_size=256, cache_capacity=1 << 12),
+    )
+
+
+def run_load(graph, tenants: int, requests: int, max_active: int,
+             tick_steps: int) -> dict:
+    """Submit ``tenants × requests`` mixed queries, tick to idle, measure."""
+    svc = build_service(graph, max_active, tick_steps)
+    t0 = time.perf_counter()
+    tickets = []
+    # Interleave tenants in submission order — the admission queue sees mixed
+    # traffic, not one tenant's burst followed by another's.
+    for r in range(requests):
+        for t in range(tenants):
+            q = MIX[(r * tenants + t) % len(MIX)]
+            tickets.append(
+                svc.submit(GraphQueryRequest(tenant=f"tenant{t}", query=q))
+            )
+    svc.run_until_idle()
+    wall = time.perf_counter() - t0
+    assert all(tk.status == DONE for tk in tickets), [
+        (tk.request.tenant, tk.status, tk.error) for tk in tickets if tk.status != DONE
+    ]
+    lat = np.array([tk.latency_s for tk in tickets])
+    matches = int(sum(tk.count for tk in tickets))
+    return {
+        "requests": len(tickets),
+        "tenants": tenants,
+        "matches": matches,
+        "wall_s": wall,
+        "matches_per_s": matches / max(wall, 1e-9),
+        "p50_s": float(np.percentile(lat, 50)),
+        "p99_s": float(np.percentile(lat, 99)),
+        "mean_s": float(lat.mean()),
+        "peak_pool_cells": svc.peak_pool_cells,
+        "ticks": svc.ticks,
+    }
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tenants", type=int, default=3)
+    ap.add_argument("--requests", type=int, default=4, help="requests per tenant")
+    ap.add_argument("--vertices", type=int, default=1 << 10)
+    ap.add_argument("--deg", type=float, default=6.0)
+    ap.add_argument("--max-active", type=int, default=4)
+    ap.add_argument("--tick-steps", type=int, default=32)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI scale: 2 tenants, 1 request each, 256-vertex graph")
+    ap.add_argument("--no-warmup", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        args.tenants, args.requests, args.vertices = 2, 1, 256
+        args.no_warmup = True
+
+    graph = bench_graph(args.vertices, args.deg, seed=7)
+    if not args.no_warmup:
+        run_load(graph, args.tenants, 1, args.max_active, args.tick_steps)
+
+    out = run_load(graph, args.tenants, args.requests, args.max_active,
+                   args.tick_steps)
+    case = f"T{args.tenants}xR{args.requests}_v{args.vertices}"
+    emit(f"service/{case}/p50_s", out["p50_s"] * 1e6, f"p99_s={out['p99_s']:.3f}")
+    emit(f"service/{case}/matches_per_s", out["wall_s"] * 1e6 / max(out["requests"], 1),
+         f"{out['matches_per_s']:.0f}")
+    record_bench("service", [dict(
+        suite="exp_service_load",
+        case=case,
+        mode="mixed-q1q3",
+        **out,
+    )])
+    print(
+        f"[service] {out['requests']} requests / {out['tenants']} tenants: "
+        f"{out['matches']} matches, {out['matches_per_s']:,.0f} matches/s, "
+        f"p50 {out['p50_s']:.3f}s, p99 {out['p99_s']:.3f}s "
+        f"({out['ticks']} ticks, peak pool {out['peak_pool_cells']} cells)"
+    )
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -19,6 +19,7 @@ from benchmarks import (
     exp9_plans,
     exp10_scaling,
     exp_dist_hybrid,
+    exp_service_load,
     table1_comm_modes,
     table4_throughput,
 )
@@ -33,6 +34,9 @@ SUITES = {
     "exp9": exp9_plans.main,
     "exp10": exp10_scaling.main,
     "exp_dist_hybrid": exp_dist_hybrid.main,
+    # argv pinned to [] so the harness's own CLI words don't leak into the
+    # suite's argparse
+    "exp_service_load": lambda: exp_service_load.main([]),
     "table4": table4_throughput.main,
 }
 

@@ -84,6 +84,10 @@ class Dataflow:
     def sink_index(self) -> int:
         return len(self.ops) - 1
 
+    def sink_indices(self) -> Tuple[int, ...]:
+        """All sink ops — more than one only for merged multi-tenant flows."""
+        return tuple(i for i, op in enumerate(self.ops) if op.kind == "sink")
+
     def ancestors(self, i: int) -> Tuple[int, ...]:
         """All transitive producers of op ``i`` (excluding ``i``), ascending.
 
@@ -329,3 +333,27 @@ class _Translator:
 def translate(plan: ExecutionPlan) -> Dataflow:
     """Paper Algorithm 2."""
     return _Translator(plan).run()
+
+
+def merge_flows(flows: Sequence[Dataflow]) -> Tuple[Dataflow, Tuple[int, ...]]:
+    """Concatenate independent dataflows into one multi-sink DAG.
+
+    Returns ``(merged, tenant_of_op)`` where ``tenant_of_op[i]`` is the index
+    of the source flow op ``i`` came from. Concatenating per-flow topological
+    orders yields a valid topological order of the union (there are no cross-
+    flow edges), so one AdaptiveScheduler pass over the merged op list
+    interleaves runnable ops across tenants — this is how N concurrent
+    queries share a single engine's scheduler tick (serve/graph_service.py,
+    distributed.run_concurrent). Per-tenant results stay separable because
+    each flow keeps its own sink (``merged.sink_indices()``, in input order)."""
+    ops: List[OpDesc] = []
+    tenant_of_op: List[int] = []
+    for t, flow in enumerate(flows):
+        off = len(ops)
+        for op in flow.ops:
+            ops.append(
+                dataclasses.replace(op, inputs=tuple(j + off for j in op.inputs))
+            )
+            tenant_of_op.append(t)
+    name = "+".join(f.query_name or f"flow{t}" for t, f in enumerate(flows))
+    return Dataflow(ops=ops, query_name=name), tuple(tenant_of_op)

@@ -42,7 +42,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from repro.core import operators as ops_mod
-from repro.core.dataflow import Dataflow, OpDesc, translate
+from repro.core.dataflow import Dataflow, OpDesc, merge_flows, translate
 from repro.core.optimizer import optimal_plan
 from repro.core.cost import GraphStats
 from repro.core.plan import ExecutionPlan
@@ -617,7 +617,9 @@ class DistributedEngine:
 
     # ------------------------------------------------------------------
 
-    def _build_runtimes(self, flow: Dataflow) -> List[object]:
+    def _build_runtimes(
+        self, flow: Dataflow, tenant_of_op: Optional[Tuple[int, ...]] = None
+    ) -> List[object]:
         ops = flow.ops
         b = self.cfg.batch_size
         queues: Dict[int, _DQueue] = {}
@@ -645,6 +647,20 @@ class DistributedEngine:
             else:
                 rt = _DSinkRT(self, op, queues[op.inputs[0]])
             runtimes.append(rt)
+
+        # Tenant tags for mixed traffic (run_concurrent): every queue and
+        # runtime of a merged flow carries its tenant id. Rows themselves
+        # never mix queues — each [P, CAP, K] buffer belongs to exactly one
+        # tenant's op — so the tag lives on the queue, not as a +1 row column
+        # that would widen every shuffle for information the queue already
+        # encodes (DESIGN.md §Graph-service).
+        for i, rt in enumerate(runtimes):
+            t = 0 if tenant_of_op is None else tenant_of_op[i]
+            rt.tenant = t
+            if tenant_of_op is not None:
+                rt.label = f"t{t}:{rt.label}"
+            if i in queues:
+                queues[i].tenant = t
 
         # Join barriers: probing may start only once every ancestor of the
         # left input has drained — no scans pending, no queued rows, no
@@ -675,17 +691,50 @@ class DistributedEngine:
         """Plan (if needed), translate, and execute on the mesh. Returns
         ``(count, stats)``; stats always reports ``engine="shard_map"`` — every
         operator, PUSH-JOIN included, ran with real collectives."""
-        if isinstance(query_or_plan, Dataflow):
-            flow = query_or_plan
-        else:
-            if isinstance(query_or_plan, QueryGraph):
-                plan = optimal_plan(
-                    query_or_plan, GraphStats.from_graph(self.graph), self.p, space
-                )
-            else:
-                plan = query_or_plan
-            flow = translate(plan)
+        flow = self._to_flow(query_or_plan, space)
+        runtimes, st = self._execute(flow)
+        sink = runtimes[flow.sink_index]
+        assert isinstance(sink, _DSinkRT)
+        return sink.count, self.stats
 
+    def run_concurrent(
+        self,
+        queries: List[QueryGraph | ExecutionPlan | Dataflow],
+        space: str = "huge",
+    ) -> Tuple[List[int], Dict]:
+        """Serve N tenants' queries through ONE engine instance: the flows are
+        merged into a single multi-sink DAG (dataflow.merge_flows) and one
+        AdaptiveScheduler pass interleaves their SPMD steps — mixed traffic on
+        shared collectives, with tenant-tagged queues/runtimes keeping results
+        and accounting separable. Returns per-tenant counts in input order."""
+        flows = [self._to_flow(q, space) for q in queries]
+        merged, tenant_of_op = merge_flows(flows)
+        runtimes, st = self._execute(merged, tenant_of_op)
+        counts = []
+        for i in merged.sink_indices():
+            sink = runtimes[i]
+            assert isinstance(sink, _DSinkRT)
+            counts.append(sink.count)
+        self.stats["tenants"] = len(flows)
+        self.stats["per_tenant_matches"] = list(counts)
+        return counts, self.stats
+
+    def _to_flow(
+        self, query_or_plan: QueryGraph | ExecutionPlan | Dataflow, space: str
+    ) -> Dataflow:
+        if isinstance(query_or_plan, Dataflow):
+            return query_or_plan
+        if isinstance(query_or_plan, QueryGraph):
+            plan = optimal_plan(
+                query_or_plan, GraphStats.from_graph(self.graph), self.p, space
+            )
+        else:
+            plan = query_or_plan
+        return translate(plan)
+
+    def _execute(
+        self, flow: Dataflow, tenant_of_op: Optional[Tuple[int, ...]] = None
+    ):
         # Release the previous run's runtimes (and their device queues) before
         # allocating fresh ones, so back-to-back runs don't hold both sets.
         self._last_runtimes = None
@@ -703,12 +752,10 @@ class DistributedEngine:
             "steal_bytes": 0,
             "probe_batches": 0,
         }
-        runtimes = self._build_runtimes(flow)
+        runtimes = self._build_runtimes(flow, tenant_of_op)
         self._last_runtimes = runtimes  # debugging / test introspection
         sched = AdaptiveScheduler(runtimes)
         st = sched.run()
         self.stats["sched_steps"] = st.steps
         self.stats["sched_backtracks"] = st.backtracks
-        sink = runtimes[flow.sink_index]
-        assert isinstance(sink, _DSinkRT)
-        return sink.count, self.stats
+        return runtimes, st

@@ -386,6 +386,249 @@ class _SinkRT(_BaseRT):
 
 
 # ---------------------------------------------------------------------------
+# Multi-tenant building blocks (serve/graph_service.py)
+# ---------------------------------------------------------------------------
+
+class QueueSlotPool:
+    """Aggregate queue budget shared by every session on one engine.
+
+    Theorem 5.4 bounds a single query's intermediate state by O(|V_q|²·D_G);
+    the pool turns that into a *service* invariant: each admitted query leases
+    the int32 cells (rows × width) its preallocated queues will occupy, and
+    admission fails — queueing the request instead of OOMing the device —
+    once the aggregate lease would exceed ``total_cells``. Releases happen
+    when a query completes or is cancelled, freeing its slice for the
+    admission queue (DESIGN.md §Graph-service)."""
+
+    def __init__(self, total_cells: int):
+        self.total_cells = int(total_cells)
+        self.leased_cells = 0
+
+    def free_cells(self) -> int:
+        return self.total_cells - self.leased_cells
+
+    def try_lease(self, cells: int) -> bool:
+        if cells > self.free_cells():
+            return False
+        self.leased_cells += cells
+        return True
+
+    def release(self, cells: int) -> None:
+        self.leased_cells -= cells
+        assert self.leased_cells >= 0, "queue-slot pool released more than leased"
+
+
+class _ScopedRT:
+    """OperatorRuntime view that charges its work to one session's stats.
+
+    Sessions from different tenants interleave inside a *single* scheduler
+    pass, so per-tenant attribution can't happen at pass granularity: the
+    wrapper swaps the engine's stats target around each ``run_one`` (every
+    stats mutation — runtimes, fetch_stage, push accounting — goes through
+    ``engine.stats``), keeping the underlying runtimes untouched."""
+
+    __slots__ = ("rt", "e", "stats", "label")
+
+    def __init__(self, rt: _BaseRT, engine: "HugeEngine", stats: EngineStats):
+        self.rt = rt
+        self.e = engine
+        self.stats = stats
+        self.label = rt.label
+
+    def has_input(self) -> bool:
+        return self.rt.has_input()
+
+    def output_free(self) -> int:
+        return self.rt.output_free()
+
+    def required_slack(self) -> int:
+        return self.rt.required_slack()
+
+    def run_one(self) -> None:
+        prev = self.e.stats
+        self.e.stats = self.stats
+        try:
+            self.rt.run_one()
+        finally:
+            self.e.stats = prev
+
+
+def _queue_plan(
+    flow: Dataflow,
+    cfg: EngineConfig,
+    d_pad: int,
+    queue_capacity: int | None = None,
+    join_buffer_capacity: int | None = None,
+) -> Dict[int, Tuple[int, int]]:
+    """Queue sizing for a dataflow: ``{op_index: (physical_rows, width)}``.
+
+    An op feeding a PUSH-JOIN buffers its side fully; every queue carries one
+    worst-case batch of slack on top (the Lemma 5.2 overflow allowance — also
+    what lets a join feed another join). Shared by session allocation and by
+    the service's admission check (which must price a query *before* paying
+    for it)."""
+    qcap = cfg.queue_capacity if queue_capacity is None else queue_capacity
+    jcap = cfg.join_buffer_capacity if join_buffer_capacity is None else join_buffer_capacity
+    succ: Dict[int, int] = {}
+    for i, op in enumerate(flow.ops):
+        for j in op.inputs:
+            succ[j] = i
+    plan: Dict[int, Tuple[int, int]] = {}
+    for i, op in enumerate(flow.ops):
+        if op.kind == "sink":
+            continue
+        slack = {
+            "scan": cfg.batch_size,
+            "verify": cfg.batch_size,
+            "extend": cfg.batch_size * d_pad,
+            "join": cfg.join_out_capacity,
+        }[op.kind]
+        s = succ.get(i)
+        if s is not None and flow.ops[s].kind == "join":
+            cap = jcap + slack
+        else:
+            cap = qcap + slack
+        plan[i] = (cap, len(op.schema))
+    return plan
+
+
+def flow_queue_cells(
+    flow: Dataflow,
+    cfg: EngineConfig,
+    d_pad: int,
+    queue_capacity: int | None = None,
+    join_buffer_capacity: int | None = None,
+) -> int:
+    """Total int32 cells a session over ``flow`` will preallocate — the
+    quantity a ``QueueSlotPool`` lease is denominated in."""
+    return sum(
+        cap * width
+        for cap, width in _queue_plan(
+            flow, cfg, d_pad, queue_capacity, join_buffer_capacity
+        ).values()
+    )
+
+
+class EngineSession:
+    """One query's execution state on a shared engine: its slot-slice of
+    device queues, its operator runtimes (barrier-wired), and its private
+    stats. Sessions are driven either to completion (``run``, what
+    ``HugeEngine.run`` does) or cooperatively in bounded ticks interleaved
+    with other tenants' sessions (``chain`` handed to one shared
+    ``AdaptiveScheduler`` per service tick — serve/graph_service.py)."""
+
+    def __init__(
+        self,
+        engine: "HugeEngine",
+        flow: Dataflow,
+        stats: EngineStats | None = None,
+        queue_capacity: int | None = None,
+        join_buffer_capacity: int | None = None,
+    ):
+        self.engine = engine
+        self.flow = flow
+        self.stats = stats if stats is not None else EngineStats()
+        self.sched_stats = ScheduleStats()
+        ops = flow.ops
+        plan = _queue_plan(flow, engine.cfg, engine.d_pad,
+                           queue_capacity, join_buffer_capacity)
+        self.queues: Dict[int, DeviceQueue] = {
+            i: DeviceQueue(cap, width) for i, (cap, width) in plan.items()
+        }
+        self.queue_cells = sum(cap * width for cap, width in plan.values())
+
+        self.runtimes: Dict[int, _BaseRT] = {}
+        for i, op in enumerate(ops):
+            q = self.queues.get(i)
+            if op.kind == "scan":
+                self.runtimes[i] = _ScanRT(engine, op, q)
+            elif op.kind == "extend":
+                self.runtimes[i] = _ExtendRT(
+                    engine, op, self.queues[op.inputs[0]], q, op.comm
+                )
+            elif op.kind == "verify":
+                self.runtimes[i] = _VerifyRT(
+                    engine, op, self.queues[op.inputs[0]], q, "pull"
+                )
+            elif op.kind == "join":
+                self.runtimes[i] = _JoinRT(
+                    engine, op, self.queues[op.inputs[0]],
+                    self.queues[op.inputs[1]], q,
+                )
+            else:
+                self.runtimes[i] = _SinkRT(engine, op, self.queues[op.inputs[0]])
+
+        # Join barriers: a PUSH-JOIN may only probe once every ancestor of its
+        # left (buffered) input has drained. With the barrier inside each
+        # join's has_input, one generalised scheduler pass over the dataflow's
+        # topological order executes the whole DAG.
+        runtimes = self.runtimes
+        for i, op in enumerate(ops):
+            if op.kind != "join":
+                continue
+            branch = (*flow.ancestors(op.inputs[0]), op.inputs[0])
+
+            def make_done(branch=branch):
+                def done() -> bool:
+                    return not any(runtimes[j].has_input() for j in branch)
+                return done
+
+            runtimes[i].left_branch_done = make_done()
+
+        # Topologically ordered, stats-scoped view for shared scheduler passes.
+        self.chain = [
+            _ScopedRT(self.runtimes[i], engine, self.stats) for i in range(len(ops))
+        ]
+
+    # -- introspection -------------------------------------------------------
+
+    def done(self) -> bool:
+        """True once every operator has drained (same criterion that ends a
+        dedicated scheduler pass, so a finished session never resumes)."""
+        return not any(rt.has_input() for rt in self.runtimes.values())
+
+    def rows_in_flight(self) -> int:
+        return sum(q.n for q in self.queues.values())
+
+    def bytes_in_flight(self) -> int:
+        return sum(q.bytes_used() for q in self.queues.values())
+
+    def memory_probe(self) -> Tuple[int, int]:
+        return self.rows_in_flight(), self.bytes_in_flight()
+
+    # -- execution -----------------------------------------------------------
+
+    def tick(self, max_steps: int) -> ScheduleStats:
+        """Run up to ``max_steps`` operator batches of this session only
+        (single-tenant cooperative slice; the multi-tenant service instead
+        concatenates several sessions' chains into one pass)."""
+        st = AdaptiveScheduler(self.chain, memory_probe=self.memory_probe).run(max_steps)
+        self.sched_stats.merge(st)
+        return st
+
+    def run(self) -> ScheduleStats:
+        st = AdaptiveScheduler(self.chain, memory_probe=self.memory_probe).run()
+        self.sched_stats.merge(st)
+        return st
+
+    def result(self) -> EnumerationResult:
+        self.stats.peak_queue_rows = self.sched_stats.peak_queue_rows
+        self.stats.peak_queue_bytes = self.sched_stats.peak_queue_bytes
+        sink_rt = self.runtimes[self.flow.sink_index]
+        matches = None
+        if (
+            self.engine.cfg.materialize
+            and isinstance(sink_rt, _SinkRT)
+            and sink_rt.rows_out
+        ):
+            matches = np.concatenate(sink_rt.rows_out, axis=0)
+        return EnumerationResult(
+            count=self.stats.count, stats=self.stats,
+            schedule=self.sched_stats, matches=matches,
+        )
+
+
+# ---------------------------------------------------------------------------
 # Engine
 # ---------------------------------------------------------------------------
 
@@ -507,6 +750,43 @@ class HugeEngine:
 
     # -- execution --------------------------------------------------------------
 
+    def to_flow(
+        self,
+        query_or_plan: QueryGraph | ExecutionPlan | Dataflow,
+        space: str = "huge",
+        stats: GraphStats | None = None,
+    ) -> Dataflow:
+        """Resolve a query / plan / dataflow into an executable dataflow."""
+        if isinstance(query_or_plan, Dataflow):
+            return query_or_plan
+        if isinstance(query_or_plan, QueryGraph):
+            gstats = stats or GraphStats.from_graph(self.graph)
+            plan = optimal_plan(query_or_plan, gstats, self.cfg.num_machines, space)
+        else:
+            plan = query_or_plan
+        return translate(plan)
+
+    def prepare(
+        self,
+        query_or_plan: QueryGraph | ExecutionPlan | Dataflow,
+        space: str = "huge",
+        stats: GraphStats | None = None,
+        session_stats: EngineStats | None = None,
+        queue_capacity: int | None = None,
+        join_buffer_capacity: int | None = None,
+    ) -> EngineSession:
+        """Build an execution session without running it. Multiple sessions
+        can coexist on one engine — they share the graph arrays, the fetch
+        caches, and the process-global jit cache, while each owns its
+        slot-slice of device queues and its own stats (the multi-tenant
+        substrate; see serve/graph_service.py)."""
+        flow = self.to_flow(query_or_plan, space, stats)
+        return EngineSession(
+            self, flow, stats=session_stats,
+            queue_capacity=queue_capacity,
+            join_buffer_capacity=join_buffer_capacity,
+        )
+
     def run(
         self,
         query_or_plan: QueryGraph | ExecutionPlan | Dataflow,
@@ -514,92 +794,13 @@ class HugeEngine:
         stats: GraphStats | None = None,
     ) -> EnumerationResult:
         t_start = time.perf_counter()
-        if isinstance(query_or_plan, Dataflow):
-            flow = query_or_plan
-        else:
-            if isinstance(query_or_plan, QueryGraph):
-                gstats = stats or GraphStats.from_graph(self.graph)
-                plan = optimal_plan(query_or_plan, gstats, self.cfg.num_machines, space)
-            else:
-                plan = query_or_plan
-            flow = translate(plan)
-
-        ops = flow.ops
-        succ: Dict[int, int] = {}
-        for i, op in enumerate(ops):
-            for j in op.inputs:
-                succ[j] = i
-
-        # Queues: an op feeding a PUSH-JOIN buffers its side fully; every
-        # queue carries one worst-case batch of slack on top (the Lemma 5.2
-        # overflow allowance — also what lets a join feed another join).
-        self._queues: Dict[int, DeviceQueue] = {}
-        for i, op in enumerate(ops):
-            if op.kind == "sink":
-                continue
-            slack = {
-                "scan": self.cfg.batch_size,
-                "verify": self.cfg.batch_size,
-                "extend": self.cfg.batch_size * self.d_pad,
-                "join": self.cfg.join_out_capacity,
-            }[op.kind]
-            s = succ.get(i)
-            if s is not None and ops[s].kind == "join":
-                cap = self.cfg.join_buffer_capacity + slack
-            else:
-                cap = self.cfg.queue_capacity + slack
-            self._queues[i] = DeviceQueue(cap, len(op.schema))
-
-        runtimes: Dict[int, _BaseRT] = {}
-        for i, op in enumerate(ops):
-            q = self._queues.get(i)
-            if op.kind == "scan":
-                runtimes[i] = _ScanRT(self, op, q)
-            elif op.kind == "extend":
-                runtimes[i] = _ExtendRT(self, op, self._queues[op.inputs[0]], q, op.comm)
-            elif op.kind == "verify":
-                runtimes[i] = _VerifyRT(self, op, self._queues[op.inputs[0]], q, "pull")
-            elif op.kind == "join":
-                runtimes[i] = _JoinRT(
-                    self, op, self._queues[op.inputs[0]], self._queues[op.inputs[1]], q
-                )
-            else:
-                runtimes[i] = _SinkRT(self, op, self._queues[op.inputs[0]])
-
-        # Join barriers: a PUSH-JOIN may only probe once every ancestor of its
-        # left (buffered) input has drained. With the barrier inside each
-        # join's has_input, one generalised scheduler pass over the dataflow's
-        # topological order executes the whole DAG — the per-branch pipeline
-        # recursion this engine used to carry is retired.
-        for i, op in enumerate(ops):
-            if op.kind != "join":
-                continue
-            branch = (*flow.ancestors(op.inputs[0]), op.inputs[0])
-
-            def make_done(branch=branch):
-                def done() -> bool:
-                    return not any(runtimes[j].has_input() for j in branch)
-                return done
-
-            runtimes[i].left_branch_done = make_done()
-
-        sched = AdaptiveScheduler(
-            [runtimes[i] for i in range(len(ops))], memory_probe=self._memory_probe
-        )
-        sched_stats = sched.run()
-
-        self.stats.peak_queue_rows = sched_stats.peak_queue_rows
-        self.stats.peak_queue_bytes = sched_stats.peak_queue_bytes
+        session = self.prepare(query_or_plan, space, stats, session_stats=self.stats)
+        self._queues = session.queues  # keeps _memory_probe over the live run
+        session.run()
+        result = session.result()
         self.stats.wall_time = time.perf_counter() - t_start
         self.stats.per_machine_rows = self.balance_rows.copy()
-
-        sink_rt = runtimes[flow.sink_index]
-        matches = None
-        if self.cfg.materialize and isinstance(sink_rt, _SinkRT) and sink_rt.rows_out:
-            matches = np.concatenate(sink_rt.rows_out, axis=0)
-        return EnumerationResult(
-            count=self.stats.count, stats=self.stats, schedule=sched_stats, matches=matches
-        )
+        return result
 
 
 def enumerate_query(

@@ -47,6 +47,19 @@ class ScheduleStats:
     backtracks: int = 0
     peak_queue_rows: int = 0
     peak_queue_bytes: int = 0
+    completed: bool = True  # False only when run(max_steps=...) hit its budget
+
+    def merge(self, other: "ScheduleStats") -> "ScheduleStats":
+        """Accumulate another pass's counters (used by tick-driven callers
+        that build one scheduler pass per service tick)."""
+        self.steps += other.steps
+        self.yields_full += other.yields_full
+        self.yields_empty += other.yields_empty
+        self.backtracks += other.backtracks
+        self.peak_queue_rows = max(self.peak_queue_rows, other.peak_queue_rows)
+        self.peak_queue_bytes = max(self.peak_queue_bytes, other.peak_queue_bytes)
+        self.completed = other.completed
+        return self
 
 
 class AdaptiveScheduler:
@@ -71,12 +84,22 @@ class AdaptiveScheduler:
             self.stats.peak_queue_rows = max(self.stats.peak_queue_rows, rows)
             self.stats.peak_queue_bytes = max(self.stats.peak_queue_bytes, nbytes)
 
-    def run(self) -> ScheduleStats:
+    def run(self, max_steps: int | None = None) -> ScheduleStats:
+        """Drive the chain until every operator drains, or — when ``max_steps``
+        is given — until that many ``run_one`` calls have executed. A budgeted
+        return sets ``stats.completed = False`` so tick-driven callers (the
+        multi-tenant graph service) know work remains; calling ``run`` again
+        on a fresh scheduler over the same runtimes resumes exactly where the
+        queues left off (all scheduling state lives in the queues/cursors)."""
         chain = self.chain
         last = len(chain) - 1
         cur = 0
         stall = 0  # iterations since the last batch ran (deadlock guard)
+        budget = max_steps if max_steps is not None else -1
         while True:
+            if budget == 0:
+                self.stats.completed = False
+                return self.stats
             if stall > 4 * len(chain) + 8:
                 raise RuntimeError(
                     "scheduler stalled: every operator is blocked on a full "
@@ -93,6 +116,11 @@ class AdaptiveScheduler:
                     ran = True
                     self.stats.steps += 1
                     self._probe()
+                    if budget > 0:
+                        budget -= 1
+                        if budget == 0:
+                            self.stats.completed = False
+                            return self.stats
                 stall = 0 if ran else stall + 1
                 if op.has_input():
                     self.stats.yields_full += 1  # yielded on full queue

@@ -1,18 +1,32 @@
-"""Batched-serving driver: ``python -m repro.launch.serve --arch rwkv6-7b --smoke``."""
+"""Serving drivers.
+
+LM batch serving (the original entry; default when no mode is given):
+
+    python -m repro.launch.serve lm --arch rwkv6-7b --smoke
+
+Multi-tenant graph service (subgraph-matching-as-a-service — N tenants'
+enumeration queries multiplexed onto one shared engine, DESIGN.md
+§Graph-service):
+
+    PYTHONPATH=src python -m repro.launch.serve graph --tenants 3 --requests 2
+"""
 from __future__ import annotations
 
 import argparse
+import sys
+import time
 
-import jax
 import numpy as np
 
-from repro.configs import ARCH_NAMES, get_config, smoke_config
-from repro.models import transformer as T
-from repro.serve.engine import BatchedServer, Request, ServeConfig
 
+def lm_main(argv=None):
+    import jax
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
+    from repro.configs import ARCH_NAMES, get_config, smoke_config
+    from repro.models import transformer as T
+    from repro.serve.engine import BatchedServer, Request, ServeConfig
+
+    ap = argparse.ArgumentParser(prog="repro.launch.serve lm")
     ap.add_argument("--arch", default="granite-3-8b", choices=ARCH_NAMES)
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--requests", type=int, default=16)
@@ -44,6 +58,78 @@ def main(argv=None):
         f"{stats['new_tokens']} new tokens, {stats['tokens_per_s']:,.1f} tok/s"
     )
     return stats
+
+
+def graph_main(argv=None):
+    from repro.core.engine import EngineConfig
+    from repro.graph import powerlaw_graph
+    from repro.serve.graph_service import (
+        GraphQueryRequest,
+        GraphService,
+        ServiceConfig,
+        TenantBudget,
+    )
+
+    ap = argparse.ArgumentParser(prog="repro.launch.serve graph")
+    ap.add_argument("--vertices", type=int, default=1 << 10)
+    ap.add_argument("--deg", type=float, default=6.0)
+    ap.add_argument("--seed", type=int, default=7)
+    ap.add_argument("--tenants", type=int, default=3)
+    ap.add_argument("--requests", type=int, default=2, help="queries per tenant")
+    ap.add_argument("--queries", default="q1,q2,q3",
+                    help="comma-separated names from PAPER_QUERIES, round-robin")
+    ap.add_argument("--max-active", type=int, default=4)
+    ap.add_argument("--tick-steps", type=int, default=32)
+    ap.add_argument("--match-budget", type=int, default=None,
+                    help="per-query match cap (stops queries early)")
+    ap.add_argument("--pool-cells", type=int, default=64 << 20)
+    args = ap.parse_args(argv)
+
+    graph = powerlaw_graph(args.vertices, args.deg, seed=args.seed)
+    svc = GraphService(
+        graph,
+        ServiceConfig(
+            total_queue_cells=args.pool_cells,
+            max_active=args.max_active,
+            tick_steps=args.tick_steps,
+            default_budget=TenantBudget(max_matches=args.match_budget),
+        ),
+        EngineConfig(batch_size=256),
+    )
+    names = args.queries.split(",")
+    t0 = time.perf_counter()
+    tickets = []
+    for r in range(args.requests):
+        for t in range(args.tenants):
+            q = names[(r * args.tenants + t) % len(names)]
+            tickets.append(
+                svc.submit(GraphQueryRequest(tenant=f"tenant{t}", query=q))
+            )
+    summary = svc.run_until_idle()
+    wall = time.perf_counter() - t0
+
+    lat = [tk.latency_s for tk in tickets if tk.latency_s is not None]
+    total = sum(tk.count for tk in tickets)
+    print(f"[graph-service] {len(tickets)} requests, {args.tenants} tenants, "
+          f"{summary['ticks']} ticks, wall {wall:.2f}s")
+    for tk in tickets:
+        print(f"  #{tk.id} {tk.request.tenant:>9s} {tk.request.query:>4} "
+              f"-> {tk.status:15s} count={tk.count:<8d} "
+              f"latency={tk.latency_s:.3f}s wait={tk.queue_wait_s or 0:.3f}s")
+    if lat:
+        print(f"  p50 {np.percentile(lat, 50):.3f}s  p99 {np.percentile(lat, 99):.3f}s  "
+              f"aggregate {total / max(wall, 1e-9):,.0f} matches/s  "
+              f"peak pool {svc.peak_pool_cells} cells")
+    return tickets
+
+
+def main(argv=None):
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if argv and argv[0] == "graph":
+        return graph_main(argv[1:])
+    if argv and argv[0] == "lm":
+        return lm_main(argv[1:])
+    return lm_main(argv)  # backward compatible: bare flags mean LM serving
 
 
 if __name__ == "__main__":

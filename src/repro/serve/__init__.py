@@ -1,3 +1,14 @@
 from repro.serve.engine import ServeConfig, BatchedServer
+from repro.serve.graph_service import (
+    GraphQueryRequest,
+    GraphService,
+    QueryTicket,
+    ServiceConfig,
+    TenantBudget,
+)
 
-__all__ = ["ServeConfig", "BatchedServer"]
+__all__ = [
+    "ServeConfig", "BatchedServer",
+    "GraphService", "GraphQueryRequest", "QueryTicket",
+    "ServiceConfig", "TenantBudget",
+]

@@ -66,6 +66,12 @@ class BatchedServer:
         for base in range(0, len(requests), scfg.batch_slots):
             group = requests[base : base + scfg.batch_slots]
             b = len(group)
+            # Latency is measured from the *group's* start, not the whole
+            # run's t0 — otherwise every request in batch k inherits the wall
+            # time of all earlier batches. (Per-request would start at enqueue
+            # time; in this offline driver all requests arrive at once, so
+            # group start is the first moment a request could be served.)
+            g0 = time.perf_counter()
             # pad prompts to a common length (right aligned batch prefill)
             plen = max(len(r.prompt) for r in group)
             toks = np.zeros((b, plen), np.int32)
@@ -92,11 +98,13 @@ class BatchedServer:
                         if tok == scfg.eos_token or len(r.out_tokens) >= scfg.max_new_tokens:
                             live[i] = False
                             r.done = True
+                            r.latency_s = time.perf_counter() - g0
                 if not live.any():
                     break
             for r in group:
+                if not r.done:
+                    r.latency_s = time.perf_counter() - g0
                 r.done = True
-                r.latency_s = time.perf_counter() - t0
         dt = time.perf_counter() - t0
         return {
             "requests": len(requests),

@@ -1,0 +1,386 @@
+"""Multi-tenant graph service: subgraph-matching-as-a-service.
+
+N concurrent ``GraphQueryRequest``s (query graph + plan space + per-tenant
+match/memory budgets) share ONE ``HugeEngine``: every admitted query becomes
+an ``EngineSession`` owning a slot-slice of the device queues, leased from a
+``QueueSlotPool`` whose total is the service-level Theorem 5.4 bound. One
+scheduler pass per service ``tick`` drives a single ``AdaptiveScheduler``
+over the *concatenation* of all active sessions' operator chains — the
+BFS/DFS-adaptive policy interleaves runnable ops across tenants exactly as it
+interleaves ops within one query, so the aggregate in-flight state stays
+under the pool bound structurally (every queue is preallocated from the
+lease). Finished queries drain their counts, release their cells, and the
+admission queue refills the freed slots; requests that would exceed a
+tenant's caps are rejected or queued instead of OOMing the engine.
+
+Lifecycle of a request::
+
+    submit() ──▶ QUEUED ──admission (pool lease + tenant caps)──▶ RUNNING
+                   │                                                │
+                   └──caps violated / queue full──▶ REJECTED        ├─▶ DONE
+                                                                    └─▶ BUDGET_EXCEEDED
+
+Latency is stamped per request — ``submitted_at`` at submit, ``finished_at``
+at completion — so a request's latency never inherits the wall time of
+batches served before it (the corrected pattern from serve/engine.py).
+
+This is deliberately cooperative and single-threaded: a "tick" is the unit a
+driving loop (launch/serve.py graph mode, benchmarks/exp_service_load.py)
+calls as fast as it likes; all state lives in device queues and host
+cursors, so the service is deterministic under any tick schedule.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from collections import deque
+from typing import Dict, List, Optional
+
+from repro.core.cost import GraphStats
+from repro.core.engine import (
+    EngineConfig,
+    EngineSession,
+    EngineStats,
+    HugeEngine,
+    QueueSlotPool,
+    flow_queue_cells,
+)
+from repro.core.query import PAPER_QUERIES, QueryGraph
+from repro.core.scheduler import AdaptiveScheduler
+from repro.graph.storage import Graph
+
+# Request states
+QUEUED = "queued"
+RUNNING = "running"
+DONE = "done"
+REJECTED = "rejected"
+BUDGET_EXCEEDED = "budget_exceeded"
+CANCELLED = "cancelled"
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantBudget:
+    """Per-tenant caps. ``None`` means uncapped (subject to the global pool)."""
+
+    max_matches: Optional[int] = None     # default per-query match budget
+    max_queue_cells: Optional[int] = None # aggregate int32 cells across the
+                                          #   tenant's admitted queries
+    max_inflight: int = 8                 # queued + running queries
+
+
+@dataclasses.dataclass
+class GraphQueryRequest:
+    """One tenant's enumeration request.
+
+    ``query`` is a :class:`QueryGraph` or a name in ``PAPER_QUERIES`` (q1..q8
+    / "triangle"). ``match_budget`` stops the query once at least that many
+    matches have been produced (batch-granular: the reported count may
+    overshoot by up to the in-flight batches of the tick that crossed the
+    line, never undershoot)."""
+
+    tenant: str
+    query: QueryGraph | str
+    space: str = "huge"
+    match_budget: Optional[int] = None
+
+
+@dataclasses.dataclass
+class QueryTicket:
+    """Handle returned by ``submit``; the service mutates it in place."""
+
+    id: int
+    request: GraphQueryRequest
+    status: str = QUEUED
+    submitted_at: float = 0.0
+    admitted_at: Optional[float] = None
+    finished_at: Optional[float] = None
+    count: int = 0
+    queue_cells: int = 0
+    stats: Optional[EngineStats] = None
+    error: Optional[str] = None
+
+    @property
+    def latency_s(self) -> Optional[float]:
+        """Submit→finish wall time, stamped per request (never inherited from
+        earlier batches — the serve/engine.py latency fix, applied here)."""
+        if self.finished_at is None:
+            return None
+        return self.finished_at - self.submitted_at
+
+    @property
+    def queue_wait_s(self) -> Optional[float]:
+        if self.admitted_at is None:
+            return None
+        return self.admitted_at - self.submitted_at
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceConfig:
+    # Global admission bound: total int32 cells all active sessions' device
+    # queues may occupy — the service-level Theorem 5.4 budget the pool
+    # enforces (DESIGN.md §Graph-service).
+    total_queue_cells: int = 64 << 20
+    # Slot-slice sizing per admitted query (passed to EngineSession; smaller
+    # than the single-query engine defaults so many tenants fit the pool).
+    queue_capacity: int = 1 << 12
+    join_buffer_capacity: int = 1 << 14
+    max_active: int = 8               # concurrent sessions (slots)
+    admission_queue_len: int = 64     # beyond this, submit() rejects
+    tick_steps: int = 32              # scheduler steps per active session per tick
+    default_budget: TenantBudget = TenantBudget()
+
+
+@dataclasses.dataclass
+class _Active:
+    ticket: QueryTicket
+    session: EngineSession
+
+
+class GraphService:
+    """Subgraph-matching-as-a-service over one shared :class:`HugeEngine`.
+
+    >>> svc = GraphService(graph)
+    >>> t = svc.submit(GraphQueryRequest(tenant="a", query="q1"))
+    >>> svc.run_until_idle()
+    >>> t.status, t.count
+    """
+
+    def __init__(
+        self,
+        graph: Graph,
+        cfg: ServiceConfig | None = None,
+        engine_cfg: EngineConfig | None = None,
+        tenants: Dict[str, TenantBudget] | None = None,
+    ):
+        self.cfg = cfg or ServiceConfig()
+        self.engine = HugeEngine(graph, engine_cfg)
+        self.gstats = GraphStats.from_graph(graph)
+        self.pool = QueueSlotPool(self.cfg.total_queue_cells)
+        self.tenants: Dict[str, TenantBudget] = dict(tenants or {})
+        self._tenant_cells: Dict[str, int] = {}
+        self._tenant_inflight: Dict[str, int] = {}
+        self._ids = itertools.count()
+        self._planned: Dict[int, tuple] = {}  # ticket id -> (cells, flow)
+        self.admission: deque[QueryTicket] = deque()
+        self.active: List[_Active] = []
+        self._rr = 0                      # round-robin offset for tick fairness
+        self.ticks = 0
+        self.peak_pool_cells = 0
+        self.peak_inflight_rows = 0
+
+    # -- tenant accounting ---------------------------------------------------
+
+    def _budget(self, tenant: str) -> TenantBudget:
+        return self.tenants.get(tenant, self.cfg.default_budget)
+
+    def tenant_usage(self, tenant: str) -> Dict[str, int]:
+        return {
+            "inflight": self._tenant_inflight.get(tenant, 0),
+            "queue_cells": self._tenant_cells.get(tenant, 0),
+        }
+
+    # -- submission / admission ----------------------------------------------
+
+    def _resolve_query(self, req: GraphQueryRequest) -> QueryGraph:
+        if isinstance(req.query, QueryGraph):
+            return req.query
+        if req.query in PAPER_QUERIES:
+            return PAPER_QUERIES[req.query]
+        raise KeyError(f"unknown query name: {req.query!r}")
+
+    def submit(self, req: GraphQueryRequest) -> QueryTicket:
+        """Accept a request into the admission queue (or reject it outright).
+
+        Rejection happens at submit time only for violations no amount of
+        waiting can cure or that protect the queue itself: an unknown query,
+        a full admission queue, or a tenant over its inflight cap. Memory-cap
+        checks happen at admission time, when the queues are actually sized."""
+        ticket = QueryTicket(id=next(self._ids), request=req,
+                            submitted_at=time.perf_counter())
+        try:
+            self._resolve_query(req)
+        except KeyError as e:
+            ticket.status = REJECTED
+            ticket.error = str(e)
+            ticket.finished_at = time.perf_counter()
+            return ticket
+        budget = self._budget(req.tenant)
+        if self._tenant_inflight.get(req.tenant, 0) >= budget.max_inflight:
+            ticket.status = REJECTED
+            ticket.error = f"tenant {req.tenant!r} over max_inflight={budget.max_inflight}"
+            ticket.finished_at = time.perf_counter()
+            return ticket
+        if len(self.admission) >= self.cfg.admission_queue_len:
+            ticket.status = REJECTED
+            ticket.error = "admission queue full"
+            ticket.finished_at = time.perf_counter()
+            return ticket
+        self._tenant_inflight[req.tenant] = self._tenant_inflight.get(req.tenant, 0) + 1
+        self.admission.append(ticket)
+        return ticket
+
+    def _price(self, ticket: QueryTicket):
+        """Plan once, price once: ``(cells, flow)`` the request's session
+        will lease/execute (cached so waiting tickets aren't re-planned
+        every admission sweep)."""
+        if ticket.id not in self._planned:
+            req = ticket.request
+            flow = self.engine.to_flow(self._resolve_query(req), req.space, self.gstats)
+            cells = flow_queue_cells(
+                flow, self.engine.cfg, self.engine.d_pad,
+                self.cfg.queue_capacity, self.cfg.join_buffer_capacity,
+            )
+            self._planned[ticket.id] = (cells, flow)
+        return self._planned[ticket.id]
+
+    def _try_admit(self) -> int:
+        """First-fit admission sweep: walk the queue in arrival order, admit
+        every request whose slot-slice fits the pool, its tenant's cell cap,
+        and a free active slot. Requests that exceed their tenant's *absolute*
+        cap (could never fit even on an idle service) are rejected."""
+        admitted = 0
+        still_waiting: deque[QueryTicket] = deque()
+        while self.admission:
+            ticket = self.admission.popleft()
+            if len(self.active) >= self.cfg.max_active:
+                still_waiting.append(ticket)
+                continue
+            req = ticket.request
+            budget = self._budget(req.tenant)
+            cells, flow = self._price(ticket)
+            if budget.max_queue_cells is not None and cells > budget.max_queue_cells:
+                self._reject(ticket,
+                             f"query needs {cells} cells > tenant cap "
+                             f"{budget.max_queue_cells}")
+                continue
+            if cells > self.pool.total_cells:
+                self._reject(ticket,
+                             f"query needs {cells} cells > service pool "
+                             f"{self.pool.total_cells}")
+                continue
+            used = self._tenant_cells.get(req.tenant, 0)
+            if (
+                budget.max_queue_cells is not None
+                and used + cells > budget.max_queue_cells
+            ) or not self.pool.try_lease(cells):
+                still_waiting.append(ticket)  # fits eventually; wait
+                continue
+            session = EngineSession(
+                self.engine, flow,
+                queue_capacity=self.cfg.queue_capacity,
+                join_buffer_capacity=self.cfg.join_buffer_capacity,
+            )
+            assert session.queue_cells == cells, "admission pricing drifted"
+            ticket.queue_cells = cells
+            ticket.admitted_at = time.perf_counter()
+            ticket.status = RUNNING
+            ticket.stats = session.stats
+            self._tenant_cells[req.tenant] = used + cells
+            self.active.append(_Active(ticket, session))
+            self.peak_pool_cells = max(self.peak_pool_cells, self.pool.leased_cells)
+            admitted += 1
+        self.admission = still_waiting
+        return admitted
+
+    def _reject(self, ticket: QueryTicket, why: str) -> None:
+        ticket.status = REJECTED
+        ticket.error = why
+        ticket.finished_at = time.perf_counter()
+        self._release_inflight(ticket)
+
+    def _release_inflight(self, ticket: QueryTicket) -> None:
+        t = ticket.request.tenant
+        self._tenant_inflight[t] = max(0, self._tenant_inflight.get(t, 0) - 1)
+
+    # -- the service tick ------------------------------------------------------
+
+    def _finish(self, act: _Active, status: str) -> None:
+        ticket = act.ticket
+        ticket.count = act.session.stats.count
+        ticket.status = status
+        ticket.finished_at = time.perf_counter()
+        self._planned.pop(ticket.id, None)
+        t = ticket.request.tenant
+        self._tenant_cells[t] = max(0, self._tenant_cells.get(t, 0) - ticket.queue_cells)
+        self.pool.release(ticket.queue_cells)
+        self._release_inflight(ticket)
+        self.active.remove(act)
+
+    def _memory_probe(self):
+        rows = sum(a.session.rows_in_flight() for a in self.active)
+        nbytes = sum(a.session.bytes_in_flight() for a in self.active)
+        self.peak_inflight_rows = max(self.peak_inflight_rows, rows)
+        return rows, nbytes
+
+    def tick(self) -> Dict[str, int]:
+        """One service tick: admit what fits, run one shared scheduler pass
+        over all active sessions (budgeted at ``tick_steps`` per session),
+        then retire sessions that completed or crossed their match budget."""
+        self.ticks += 1
+        admitted = self._try_admit()
+        steps = 0
+        if self.active:
+            # Rotate the concatenation order so no tenant permanently owns
+            # the scheduler's starting cursor (round-robin fairness).
+            order = self.active[self._rr % len(self.active):] + \
+                self.active[: self._rr % len(self.active)]
+            self._rr += 1
+            chain = [rt for a in order for rt in a.session.chain]
+            sched = AdaptiveScheduler(chain, memory_probe=self._memory_probe)
+            st = sched.run(max_steps=self.cfg.tick_steps * len(self.active))
+            steps = st.steps
+        completed = 0
+        for act in list(self.active):
+            req = act.ticket.request
+            budget = req.match_budget
+            if budget is None:
+                budget = self._budget(req.tenant).max_matches
+            if act.session.done():
+                self._finish(act, DONE)
+                completed += 1
+            elif budget is not None and act.session.stats.count >= budget:
+                self._finish(act, BUDGET_EXCEEDED)
+                completed += 1
+        if completed:
+            admitted += self._try_admit()
+        return {"admitted": admitted, "steps": steps, "completed": completed,
+                "active": len(self.active), "queued": len(self.admission)}
+
+    def run_until_idle(self, max_ticks: int = 1_000_000) -> Dict[str, int]:
+        """Tick until the admission queue and all slots drain."""
+        done_total = 0
+        for _ in range(max_ticks):
+            if not self.active and not self.admission:
+                break
+            out = self.tick()
+            done_total += out["completed"]
+            if (
+                out["steps"] == 0 and out["admitted"] == 0
+                and out["completed"] == 0 and (self.active or self.admission)
+            ):
+                raise RuntimeError(
+                    "graph service made no progress: active sessions are "
+                    "deadlocked or queued work can never be admitted "
+                    f"(active={len(self.active)}, queued={len(self.admission)})"
+                )
+        return {
+            "ticks": self.ticks,
+            "completed": done_total,
+            "peak_pool_cells": self.peak_pool_cells,
+            "peak_inflight_rows": self.peak_inflight_rows,
+        }
+
+    def cancel(self, ticket: QueryTicket) -> bool:
+        """Cancel a queued or running request; frees its slots immediately."""
+        for act in self.active:
+            if act.ticket is ticket:
+                self._finish(act, CANCELLED)
+                return True
+        if ticket in self.admission:
+            self.admission.remove(ticket)
+            ticket.status = CANCELLED
+            ticket.finished_at = time.perf_counter()
+            self._release_inflight(ticket)
+            return True
+        return False
