@@ -67,6 +67,20 @@ REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 @functools.lru_cache(maxsize=1)
+def flowcheck_rule_count() -> int:
+    """Error count from the clean-tree flowcheck corpus (0 on a healthy
+    tree; -1 when the verifier itself failed to run). Stamped on every
+    recorded bench entry so a trajectory point produced on a tree whose
+    plans don't verify is visibly tainted."""
+    try:
+        from repro.analysis import clean_tree_flowcheck
+
+        return len([d for d in clean_tree_flowcheck() if d.severity == "error"])
+    except Exception:  # noqa: BLE001 — the stamp must never sink a bench run
+        return -1
+
+
+@functools.lru_cache(maxsize=1)
 def git_rev() -> str:
     """Short git revision of the repo (``unknown`` outside a checkout)."""
     try:
@@ -85,7 +99,8 @@ def record_bench(name: str, entries: List[dict]) -> str:
 
     Entry format (EXPERIMENTS.md §Perf): each point carries ``suite``,
     ``case``, ``mode``, ``matches``, ``wall_s``, ``matches_per_s``; this
-    helper stamps ``recorded`` (ISO-8601 timestamp) and ``git`` (short rev)
+    helper stamps ``recorded`` (ISO-8601 timestamp), ``git`` (short rev),
+    and ``flowcheck_rules`` (clean-tree verifier error count — 0 expected)
     so successive PRs accumulate an *attributable* regression trajectory
     instead of overwriting it."""
     path = os.path.join(REPO_ROOT, f"BENCH_{name}.json")
@@ -96,7 +111,8 @@ def record_bench(name: str, entries: List[dict]) -> str:
     stamp = time.strftime("%Y-%m-%dT%H:%M:%S%z")
     doc["updated"] = stamp
     doc.setdefault("entries", []).extend(
-        [dict(e, recorded=stamp, git=git_rev()) for e in entries]
+        [dict(e, recorded=stamp, git=git_rev(),
+              flowcheck_rules=flowcheck_rule_count()) for e in entries]
     )
     with open(path, "w") as f:
         json.dump(doc, f, indent=2)

@@ -2,13 +2,22 @@
 
 ``PYTHONPATH=src python -m benchmarks.run``           (all, CSV to stdout)
 ``PYTHONPATH=src python -m benchmarks.run table1``    (one table)
+``PYTHONPATH=src python -m benchmarks.run --list``    (print the registry)
 
 Each function prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
+
+The registry is self-checking: every ``exp*.py`` / ``table*.py`` module in
+this package must appear in ``SUITES`` exactly once (and every registered
+module must exist on disk), so a new experiment file can't be silently
+orphaned from ``--all`` runs — the harness refuses to start instead.
 """
 from __future__ import annotations
 
+import inspect
+import os
 import sys
 import time
+from typing import List
 
 from benchmarks import (
     exp1_plugin_plans,
@@ -25,33 +34,79 @@ from benchmarks import (
 )
 
 SUITES = {
-    "table1": table1_comm_modes.main,
-    "exp1": exp1_plugin_plans.main,
-    "exp4": exp4_batching.main,
-    "exp5": exp5_cache.main,
-    "exp6": exp6_cache_design.main,
-    "exp7": exp7_scheduling.main,
-    "exp9": exp9_plans.main,
-    "exp10": exp10_scaling.main,
-    "exp_dist_hybrid": exp_dist_hybrid.main,
-    # argv pinned to [] so the harness's own CLI words don't leak into the
-    # suite's argparse
-    "exp_service_load": lambda: exp_service_load.main([]),
-    "table4": table4_throughput.main,
+    "table1": table1_comm_modes,
+    "exp1": exp1_plugin_plans,
+    "exp4": exp4_batching,
+    "exp5": exp5_cache,
+    "exp6": exp6_cache_design,
+    "exp7": exp7_scheduling,
+    "exp9": exp9_plans,
+    "exp10": exp10_scaling,
+    "exp_dist_hybrid": exp_dist_hybrid,
+    "exp_service_load": exp_service_load,
+    "table4": table4_throughput,
 }
 
 
-def main() -> None:
-    wanted = sys.argv[1:] or list(SUITES)
+def _run_suite(mod) -> None:
+    sig = inspect.signature(mod.main)
+    if sig.parameters:
+        # argv pinned to [] so the harness's own CLI words don't leak into
+        # the suite's argparse
+        mod.main([])
+    else:
+        mod.main()
+
+
+def registry_problems() -> List[str]:
+    """Every ``exp*``/``table*`` module on disk registered exactly once."""
+    bench_dir = os.path.dirname(os.path.abspath(__file__))
+    on_disk = sorted(
+        f[: -len(".py")]
+        for f in os.listdir(bench_dir)
+        if f.endswith(".py") and (f.startswith("exp") or f.startswith("table"))
+    )
+    registered = [m.__name__.rsplit(".", 1)[-1] for m in SUITES.values()]
+    problems = []
+    for mod in on_disk:
+        n = registered.count(mod)
+        if n == 0:
+            problems.append(f"benchmarks/{mod}.py is not registered in SUITES")
+        elif n > 1:
+            problems.append(f"benchmarks/{mod}.py is registered {n} times")
+    for mod in registered:
+        if mod not in on_disk:
+            problems.append(f"SUITES entry {mod!r} has no benchmarks/{mod}.py")
+    return problems
+
+
+def main(argv: List[str] | None = None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    problems = registry_problems()
+    if problems:
+        for p in problems:
+            print(f"registry error: {p}", file=sys.stderr)
+        return 2
+    if "--list" in argv:
+        for name, mod in SUITES.items():
+            print(f"{name:18s} benchmarks/{mod.__name__.rsplit('.', 1)[-1]}.py")
+        return 0
+    wanted = [a for a in argv if not a.startswith("-")] or list(SUITES)
+    unknown = [w for w in wanted if w not in SUITES]
+    if unknown:
+        print(f"unknown suite(s): {', '.join(unknown)} "
+              f"(--list prints the registry)", file=sys.stderr)
+        return 2
     print("name,us_per_call,derived")
     for name in wanted:
         t0 = time.time()
         try:
-            SUITES[name]()
+            _run_suite(SUITES[name])
         except Exception as e:  # noqa: BLE001 — keep the suite running
             print(f"{name}/ERROR,0.0,{type(e).__name__}:{e}")
         print(f"{name}/_suite_wall,{(time.time() - t0) * 1e6:.0f},done")
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

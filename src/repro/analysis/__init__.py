@@ -1,0 +1,59 @@
+"""Static analysis for the HUGE reproduction: flowcheck + tracelint.
+
+Two passes, one diagnostic format (DESIGN.md §Static-analysis):
+
+* :mod:`repro.analysis.flowcheck` — a static verifier over
+  ``ExecutionPlan`` / ``Dataflow`` values: DAG well-formedness, per-op
+  schema propagation, Eq.-3 comm-mode legality, extend-order connectivity,
+  and Theorem-5.4 queue-cell accounting — all *without executing* the plan.
+  Both engines and the multi-tenant ``GraphService`` run it as a mandatory
+  pre-flight, so a malformed (or adversarial) query is rejected with a
+  structured :class:`Diagnostic` instead of detonating as a shape error
+  mid-``shard_map``.
+* :mod:`repro.analysis.tracelint` — an AST lint over the source tree for
+  tracer-unsafe Python (host syncs and traced-value branching inside
+  jitted / shard_map'd functions), dtype drift into the int32 ``[P, CAP, K]``
+  queue buffers, and Pallas kernels missing their pure-jnp ref twin or
+  parity test.
+
+CLI: ``python -m repro.analysis --all --baseline analysis/baseline.txt``
+(the CI ``static-analysis`` job). Existing, justified findings live in the
+checked-in baseline file; anything new fails the run.
+"""
+from __future__ import annotations
+
+from repro.analysis.diagnostics import (
+    Diagnostic,
+    FlowcheckError,
+    format_diagnostics,
+    load_baseline,
+    split_baselined,
+)
+from repro.analysis.flowcheck import (
+    check_flow,
+    check_plan,
+    check_query,
+    verify_flow,
+)
+
+__all__ = [
+    "Diagnostic",
+    "FlowcheckError",
+    "check_flow",
+    "check_plan",
+    "check_query",
+    "verify_flow",
+    "format_diagnostics",
+    "load_baseline",
+    "split_baselined",
+    "clean_tree_flowcheck",
+]
+
+
+def clean_tree_flowcheck():
+    """Flowcheck every paper query under every plan space (the clean-tree
+    corpus the CLI and ``benchmarks.common.record_bench`` certify against).
+    Returns the list of diagnostics — expected empty on a healthy tree."""
+    from repro.analysis.corpus import corpus_findings
+
+    return corpus_findings()

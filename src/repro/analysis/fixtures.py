@@ -1,0 +1,158 @@
+"""Seeded known-bad fixtures for flowcheck / tracelint.
+
+Each fixture is a deliberately malformed plan, dataflow, or source snippet
+with the rule id(s) the analyses must report. They serve three consumers:
+
+* ``tests/test_flowcheck.py`` / ``tests/test_tracelint.py`` assert the
+  expected rule ids fire;
+* ``python -m repro.analysis --fixture <name>`` runs one fixture and exits
+  nonzero, printing its rule ids (the acceptance check that the verifier
+  actually *fails* on bad inputs, not only passes on good ones);
+* ``GraphService`` admission tests submit the bad dataflows as adversarial
+  tenant queries.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Tuple
+
+from repro.analysis.diagnostics import Diagnostic
+from repro.analysis.flowcheck import check_flow, check_plan
+from repro.analysis.tracelint import lint_source
+from repro.core.dataflow import Dataflow, OpDesc
+from repro.core.plan import ExecutionPlan, PlanNode
+from repro.core.query import QueryGraph
+
+
+def _scan(a: int, b: int) -> OpDesc:
+    return OpDesc(kind="scan", schema=(a, b), scan_edge=(a, b))
+
+
+def dangling_sink_flow() -> Dataflow:
+    """An extend branch that never reaches the sink: its rows are dropped."""
+    return Dataflow(ops=[
+        _scan(0, 1),
+        OpDesc(kind="extend", schema=(0, 1, 2), inputs=(0,), ext=(0,),
+               new_vertex=2, comm="pull"),          # orphan: nothing consumes it
+        _scan(0, 2),
+        OpDesc(kind="sink", schema=(0, 2), inputs=(2,)),
+    ], query_name="fixture-dangling-sink")
+
+
+def bad_join_key_flow() -> Dataflow:
+    """Join keyed on columns that bind different query vertices per side."""
+    return Dataflow(ops=[
+        _scan(0, 1),
+        _scan(1, 2),
+        OpDesc(kind="join", comm="push", schema=(0, 1, 2), inputs=(0, 1),
+               key_left=(0,),    # binds v0 on the left...
+               key_right=(1,),   # ...but v2 on the right
+               right_extra=(1,)),
+        OpDesc(kind="sink", schema=(0, 1, 2), inputs=(2,)),
+    ], query_name="fixture-bad-join-key")
+
+
+def disconnected_extend_flow() -> Dataflow:
+    """Extend with an empty Eq.-2 intersection set: a cross product."""
+    return Dataflow(ops=[
+        _scan(0, 1),
+        OpDesc(kind="extend", schema=(0, 1, 2), inputs=(0,), ext=(),
+               new_vertex=2, comm="pull"),
+        OpDesc(kind="sink", schema=(0, 1, 2), inputs=(1,)),
+    ], query_name="fixture-disconnected-extend")
+
+
+def pull_join_flow() -> Dataflow:
+    """A materialised join in pull mode — illegal per Eq. 3 / §5.2."""
+    return Dataflow(ops=[
+        _scan(0, 1),
+        _scan(1, 2),
+        OpDesc(kind="join", comm="pull", schema=(0, 1, 2), inputs=(0, 1),
+               key_left=(1,), key_right=(0,), right_extra=(1,)),
+        OpDesc(kind="sink", schema=(0, 1, 2), inputs=(2,)),
+    ], query_name="fixture-pull-join")
+
+
+def oversized_queue_flow() -> Dataflow:
+    """A wide, join-heavy flow whose preallocated queues overflow any sane
+    slot pool once priced (the queue-cell fixture pairs it with a tiny
+    ``max_cells`` budget in the runner below)."""
+    ops: List[OpDesc] = [_scan(0, 1)]
+    schema = (0, 1)
+    for v in range(2, 8):
+        ops.append(OpDesc(kind="extend", schema=schema + (v,),
+                          inputs=(len(ops) - 1,), ext=(0,), new_vertex=v,
+                          comm="pull"))
+        schema = schema + (v,)
+    ops.append(OpDesc(kind="sink", schema=schema, inputs=(len(ops) - 1,)))
+    return Dataflow(ops=ops, query_name="fixture-oversized-queues")
+
+
+def disconnected_plan() -> ExecutionPlan:
+    """Plan whose join unit is a disconnected edge set (extend order leaves
+    the matched prefix)."""
+    query = QueryGraph.from_edges([(0, 1), (2, 3), (1, 2)], name="fixture-disc")
+    root = PlanNode(edges=frozenset({(0, 1), (2, 3)}))
+    return ExecutionPlan(query=query, root=root, symmetry_conditions=())
+
+
+def illegal_eq3_plan() -> ExecutionPlan:
+    """(wco, pull) on a join that is not a complete star join (Def. 3.1)."""
+    query = QueryGraph.from_edges([(0, 1), (1, 2), (2, 3), (3, 0)], name="fixture-eq3")
+    left = PlanNode(edges=frozenset({(0, 1)}))
+    right = PlanNode(edges=frozenset({(1, 2), (2, 3), (0, 3)}))
+    root = PlanNode(edges=frozenset(query.edges), left=left, right=right,
+                    algo="wco", comm="pull")
+    return ExecutionPlan(query=query, root=root, symmetry_conditions=())
+
+
+BAD_TRACED_SOURCE = '''\
+import functools
+import jax
+import jax.numpy as jnp
+import numpy as np
+from repro.graph.storage import INVALID
+
+
+@functools.partial(jax.jit, static_argnames=("cap",))
+def bad_step(rows, n, cap):
+    if n > 0:                       # traced-branch: n is a tracer
+        rows = rows + 1
+    total = int(jnp.sum(rows))      # host-sync: int() on a traced value
+    host = np.asarray(rows)         # host-sync: forced device->host copy
+    assert n < cap                  # traced-branch: assert on a tracer
+    return rows, total, host
+
+
+def make_queue(cap, width):
+    buf = jnp.full((cap, width), INVALID)   # queue-dtype: no explicit int32
+    return buf
+'''
+
+
+# fixture name -> (runner, expected rule ids). A runner returns diagnostics.
+FIXTURES: Dict[str, Tuple[Callable[[], List[Diagnostic]], Tuple[str, ...]]] = {
+    "dangling-sink": (lambda: check_flow(dangling_sink_flow()), ("orphan-op",)),
+    "bad-join-key": (lambda: check_flow(bad_join_key_flow()),
+                     ("join-key-incompatible",)),
+    "disconnected-extend": (lambda: check_flow(disconnected_extend_flow()),
+                            ("ext-disconnected",)),
+    "pull-join": (lambda: check_flow(pull_join_flow()), ("comm-illegal",)),
+    "oversized-queues": (lambda: _run_oversized(), ("queue-over-pool",)),
+    "disconnected-plan": (lambda: check_plan(disconnected_plan()),
+                          ("subquery-disconnected",)),
+    "illegal-eq3": (lambda: check_plan(illegal_eq3_plan()), ("eq3-illegal",)),
+    "bad-kernel-source": (lambda: lint_source(BAD_TRACED_SOURCE, "fixture.py"),
+                          ("traced-branch", "host-sync", "queue-dtype")),
+}
+
+
+def _run_oversized() -> List[Diagnostic]:
+    from repro.core.engine import EngineConfig
+
+    return check_flow(oversized_queue_flow(), cfg=EngineConfig(), d_pad=64,
+                      max_cells=1 << 20)
+
+
+def run_fixture(name: str) -> Tuple[List[Diagnostic], Tuple[str, ...]]:
+    runner, expected = FIXTURES[name]
+    return runner(), expected

@@ -1,0 +1,467 @@
+"""AST-based tracer-safety lint over the source tree.
+
+Rules (DESIGN.md §Static-analysis):
+
+``host-sync``
+    ``.item()`` / ``.tolist()`` / ``int()`` / ``float()`` / ``bool()`` /
+    ``np.asarray()`` / ``np.array()`` / ``jax.device_get()`` applied to a
+    *traced* value inside a jitted / shard_map'd / vmapped function — a
+    device→host sync in a hot path (and a trace error for data-dependent
+    values).
+
+``traced-branch``
+    ``if`` / ``while`` / ``assert`` whose condition references a traced value
+    inside a traced function — Python control flow cannot branch on tracers;
+    use ``jnp.where`` / ``lax.cond`` / ``lax.while_loop``.
+
+``queue-dtype``
+    An ``INVALID``-filled buffer (``jnp.full(..., INVALID)`` et al. assigned
+    to a ``*buf*``/``*queue*`` name) created without an explicit int32 dtype —
+    dtype drift into the ``[P, CAP, K]`` device queues silently widens every
+    shuffle and breaks the int32 key packing (``machine·|V|+vid`` must fit
+    int32).
+
+``kernel-ref-missing`` / ``kernel-test-missing``
+    A public Pallas kernel ``X_kernel`` in ``kernels/<name>/<name>.py``
+    without a pure-jnp twin ``X_ref`` in the sibling ``ref.py``, or not
+    referenced by the parity suite ``tests/test_kernels.py`` — the
+    differential-testing contract every kernel must keep.
+
+Tracedness is detected statically: a function is *traced* when it is
+decorated with (or wrapped by) ``jit`` / ``pjit`` / ``vmap`` / ``pmap`` /
+``shard_map`` / ``pallas_call`` (including ``functools.partial(jax.jit, …)``
+decorators and local functions passed by name to such a wrapper, e.g. the
+``f`` handed to ``self._shardmap``), or nested inside a traced function.
+Within a traced function, *traced values* are approximated by forward taint:
+parameters are tainted, and any name assigned from an expression touching a
+tainted name becomes tainted. Closure variables (e.g. config flags captured
+from the enclosing builder) stay untainted, so static-shape branching is not
+flagged.
+
+Finding locations are ``relpath::qualname::symbol`` — no line numbers — so
+baseline entries survive unrelated edits.
+"""
+from __future__ import annotations
+
+import ast
+import os
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis.diagnostics import Diagnostic, ERROR
+
+TRACE_WRAPPERS = {
+    "jit", "pjit", "vmap", "pmap", "shard_map", "_shardmap", "pallas_call",
+}
+HOST_SYNC_CALLS = {"int", "float", "bool"}
+HOST_SYNC_ATTRS = {"item", "tolist"}
+HOST_SYNC_QUALIFIED = {("np", "asarray"), ("np", "array"), ("numpy", "asarray"),
+                       ("numpy", "array"), ("jax", "device_get")}
+BUFFER_FILLS = {"full", "zeros", "ones", "empty"}
+# Attributes of traced arrays that are *static* at trace time: branching on
+# them is ordinary Python metaprogramming, not data-dependent control flow.
+STATIC_ATTRS = {"shape", "ndim", "dtype", "size", "aval", "weak_type"}
+
+
+def _terminal(node: ast.AST) -> Optional[str]:
+    """Right-most name of a Name / Attribute / Call-func chain."""
+    if isinstance(node, ast.Call):
+        return _terminal(node.func)
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    if isinstance(node, ast.Name):
+        return node.id
+    return None
+
+
+def _dotted(node: ast.AST) -> Tuple[str, ...]:
+    """(base, attr, …) for Name/Attribute chains, () when not a plain chain."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return tuple(reversed(parts))
+    return ()
+
+
+def _is_trace_wrapper(node: ast.AST) -> bool:
+    t = _terminal(node)
+    if t in TRACE_WRAPPERS:
+        return True
+    # functools.partial(jax.jit, static_argnames=...) used as a decorator
+    if isinstance(node, ast.Call) and _terminal(node.func) == "partial":
+        return any(_terminal(a) in TRACE_WRAPPERS for a in node.args)
+    return False
+
+
+# ---------------------------------------------------------------------------
+# Traced-function discovery
+# ---------------------------------------------------------------------------
+
+def _static_argnames(call: ast.Call, fn: ast.AST) -> Set[str]:
+    """Parameter names declared static via ``static_argnames``/``static_argnums``
+    in a jit-style wrapper call — those arrive as plain Python values, not
+    tracers, so they must not seed the taint set."""
+    names: Set[str] = set()
+    a = fn.args
+    positional = [p.arg for p in a.posonlyargs + a.args]
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            for n in ast.walk(kw.value):
+                if isinstance(n, ast.Constant) and isinstance(n.value, str):
+                    names.add(n.value)
+        elif kw.arg == "static_argnums":
+            for n in ast.walk(kw.value):
+                if isinstance(n, ast.Constant) and isinstance(n.value, int):
+                    if 0 <= n.value < len(positional):
+                        names.add(positional[n.value])
+    return names
+
+
+def _collect_traced(tree: ast.Module) -> Dict[ast.AST, Set[str]]:
+    """FunctionDefs that are traced — decorator-wrapped, or passed by name to a
+    trace wrapper call anywhere in the module — mapped to their statically
+    declared (non-tracer) parameter names."""
+    traced: Dict[ast.AST, Set[str]] = {}
+    defs_by_name: Dict[str, List[ast.AST]] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            defs_by_name.setdefault(node.name, []).append(node)
+            for dec in node.decorator_list:
+                if _is_trace_wrapper(dec):
+                    static = traced.setdefault(node, set())
+                    if isinstance(dec, ast.Call):
+                        static |= _static_argnames(dec, node)
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) and _is_trace_wrapper(node.func):
+            for arg in list(node.args) + [kw.value for kw in node.keywords]:
+                if isinstance(arg, ast.Name):
+                    for fn in defs_by_name.get(arg.id, []):
+                        traced.setdefault(fn, set()).update(
+                            _static_argnames(node, fn))
+    return traced
+
+
+def _qualnames(tree: ast.Module) -> Dict[ast.AST, str]:
+    """Map every FunctionDef to its dotted qualname (Class.method, fn.inner)."""
+    out: Dict[ast.AST, str] = {}
+
+    def walk(node: ast.AST, prefix: str) -> None:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                q = f"{prefix}{child.name}"
+                out[child] = q
+                walk(child, q + ".")
+            elif isinstance(child, ast.ClassDef):
+                walk(child, f"{prefix}{child.name}.")
+            else:
+                walk(child, prefix)
+
+    walk(tree, "")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Taint lint inside one traced function
+# ---------------------------------------------------------------------------
+
+class _FnLinter:
+    def __init__(self, fn: ast.AST, relpath: str, qualname: str,
+                 static_params: Optional[Set[str]] = None):
+        self.fn = fn
+        self.relpath = relpath
+        self.qualname = qualname
+        self.findings: List[Diagnostic] = []
+        a = fn.args
+        self.tainted: Set[str] = {p.arg for p in a.posonlyargs + a.args + a.kwonlyargs}
+        if a.vararg:
+            self.tainted.add(a.vararg.arg)
+        if a.kwarg:
+            self.tainted.add(a.kwarg.arg)
+        self.tainted -= static_params or set()
+
+    def _emit(self, rule: str, symbol: str, message: str, hint: str) -> None:
+        d = Diagnostic(
+            rule=rule, message=message, severity=ERROR, hint=hint,
+            where=f"{self.relpath}::{self.qualname}::{symbol}",
+        )
+        if d.key() not in {f.key() for f in self.findings}:
+            self.findings.append(d)
+
+    def _expr_tainted(self, node: ast.AST) -> bool:
+        # Taint does not flow through trace-time-static projections: an
+        # array's .shape/.ndim/.dtype (and len() of it) are plain Python
+        # values while tracing, so `if x.shape[0] % TILE:` is legal.
+        if isinstance(node, ast.Attribute) and node.attr in STATIC_ATTRS:
+            return False
+        if (isinstance(node, ast.Call) and isinstance(node.func, ast.Name)
+                and node.func.id == "len"):
+            return False
+        if isinstance(node, ast.Name):
+            return node.id in self.tainted
+        return any(self._expr_tainted(c) for c in ast.iter_child_nodes(node))
+
+    def _taint_target(self, target: ast.AST) -> None:
+        for n in ast.walk(target):
+            if isinstance(n, ast.Name):
+                self.tainted.add(n.id)
+
+    def _propagate(self, body: Sequence[ast.stmt]) -> None:
+        for stmt in body:
+            if isinstance(stmt, ast.Assign) and self._expr_tainted(stmt.value):
+                for t in stmt.targets:
+                    self._taint_target(t)
+            elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+                if stmt.value is not None and self._expr_tainted(stmt.value):
+                    self._taint_target(stmt.target)
+            elif isinstance(stmt, ast.For):
+                if self._expr_tainted(stmt.iter):
+                    self._taint_target(stmt.target)
+                self._propagate(stmt.body + stmt.orelse)
+            elif isinstance(stmt, (ast.If, ast.While)):
+                self._propagate(stmt.body + stmt.orelse)
+            elif isinstance(stmt, (ast.With,)):
+                self._propagate(stmt.body)
+            elif isinstance(stmt, ast.Try):
+                self._propagate(stmt.body + stmt.orelse + stmt.finalbody)
+                for h in stmt.handlers:
+                    self._propagate(h.body)
+            elif isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue  # nested defs are linted as their own traced scope
+
+    def _check_calls(self, root: ast.AST) -> None:
+        for node in ast.walk(root):
+            if not isinstance(node, ast.Call):
+                continue
+            args = list(node.args) + [kw.value for kw in node.keywords]
+            arg_tainted = any(self._expr_tainted(a) for a in args)
+            func = node.func
+            if isinstance(func, ast.Name) and func.id in HOST_SYNC_CALLS and arg_tainted:
+                self._emit(
+                    "host-sync", func.id,
+                    f"{func.id}() on a traced value inside a traced function",
+                    "keep it on device (jnp) or hoist the sync out of the "
+                    "jitted/shard_map'd region",
+                )
+            elif isinstance(func, ast.Attribute):
+                if func.attr in HOST_SYNC_ATTRS and self._expr_tainted(func.value):
+                    self._emit(
+                        "host-sync", func.attr,
+                        f".{func.attr}() on a traced value inside a traced function",
+                        "return the array and sync at the call site",
+                    )
+                elif _dotted(func)[:2] in HOST_SYNC_QUALIFIED and arg_tainted:
+                    self._emit(
+                        "host-sync", ".".join(_dotted(func)[:2]),
+                        f"{'.'.join(_dotted(func)[:2])}() forces a host copy of a "
+                        "traced value",
+                        "stay in jnp inside traced code",
+                    )
+
+    def _check_branches(self, body: Sequence[ast.stmt]) -> None:
+        for stmt in body:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            if isinstance(stmt, (ast.If, ast.While)) and self._expr_tainted(stmt.test):
+                kw = "if" if isinstance(stmt, ast.If) else "while"
+                self._emit(
+                    "traced-branch", kw,
+                    f"`{kw}` on a traced value — Python control flow cannot "
+                    "branch on tracers",
+                    "use jnp.where / lax.cond / lax.while_loop",
+                )
+            if isinstance(stmt, ast.Assert) and self._expr_tainted(stmt.test):
+                self._emit(
+                    "traced-branch", "assert",
+                    "`assert` on a traced value — either a trace error or a "
+                    "silent no-op under jit",
+                    "use checkify or validate outside the traced region",
+                )
+            for field in ("body", "orelse", "finalbody"):
+                sub = getattr(stmt, field, None)
+                if sub:
+                    self._check_branches(sub)
+            for h in getattr(stmt, "handlers", []):
+                self._check_branches(h.body)
+
+    def run(self) -> List[Diagnostic]:
+        # Two propagation sweeps approximate a fixpoint for loop-carried taint.
+        self._propagate(self.fn.body)
+        self._propagate(self.fn.body)
+        self._check_branches(self.fn.body)
+        self._check_calls(self.fn)
+        return self.findings
+
+
+# ---------------------------------------------------------------------------
+# Queue-buffer dtype rule (module-wide)
+# ---------------------------------------------------------------------------
+
+def _lint_queue_dtypes(
+    tree: ast.Module, relpath: str, quals: Dict[ast.AST, str]
+) -> List[Diagnostic]:
+    out: List[Diagnostic] = []
+    # Map each statement to its enclosing function qualname for the location.
+    owner: Dict[ast.AST, str] = {}
+
+    def tag(node: ast.AST, q: str) -> None:
+        for child in ast.iter_child_nodes(node):
+            nq = quals.get(child, q)
+            owner[child] = nq
+            tag(child, nq)
+
+    tag(tree, "<module>")
+
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Assign):
+            continue
+        call = node.value
+        if not (isinstance(call, ast.Call) and _terminal(call.func) in BUFFER_FILLS):
+            continue
+        targets = [t for t in node.targets]
+        names = [n for t in targets for n in ast.walk(t) if isinstance(n, (ast.Name, ast.Attribute))]
+        tnames = {(_terminal(n) or "").lower() for n in names}
+        is_queueish = any("buf" in t or "queue" in t for t in tnames)
+        fills_invalid = any(
+            _terminal(a) == "INVALID" for a in call.args
+        ) or any(_terminal(kw.value) == "INVALID" for kw in call.keywords
+                 if kw.arg in (None, "fill_value"))
+        if not (is_queueish and fills_invalid):
+            continue
+        dtype_node = None
+        for kw in call.keywords:
+            if kw.arg == "dtype":
+                dtype_node = kw.value
+        if dtype_node is None and _terminal(call.func) == "full" and len(call.args) >= 3:
+            dtype_node = call.args[2]
+        tname = sorted(tnames)[0] if tnames else "buf"
+        q = owner.get(node, "<module>")
+        if dtype_node is None:
+            out.append(Diagnostic(
+                "queue-dtype",
+                f"INVALID-filled buffer {tname!r} created without an explicit "
+                "dtype; queue buffers are int32 by contract ([P, CAP, K] "
+                "shape convention)",
+                where=f"{relpath}::{q}::{tname}",
+                hint="pass jnp.int32 explicitly",
+            ))
+        elif _terminal(dtype_node) != "int32":
+            out.append(Diagnostic(
+                "queue-dtype",
+                f"INVALID-filled buffer {tname!r} created with dtype "
+                f"{_terminal(dtype_node)!r}; queue buffers are int32 by contract",
+                where=f"{relpath}::{q}::{tname}",
+                hint="use jnp.int32 (keys pack machine·|V|+vid into int32)",
+            ))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Kernel ref-twin / parity-test rule
+# ---------------------------------------------------------------------------
+
+def _public_kernels(path: str) -> List[str]:
+    with open(path, encoding="utf-8") as f:
+        tree = ast.parse(f.read(), filename=path)
+    return [
+        n.name
+        for n in tree.body
+        if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+        and n.name.endswith("_kernel")
+        and not n.name.startswith("_")
+    ]
+
+
+def check_kernel_twins(
+    kernels_dir: str, tests_file: Optional[str], rel_prefix: str = "kernels"
+) -> List[Diagnostic]:
+    """Every public ``X_kernel`` in ``kernels/<name>/<name>.py`` needs an
+    ``X_ref`` twin in the sibling ``ref.py`` and a mention in the parity
+    suite (``tests/test_kernels.py``)."""
+    out: List[Diagnostic] = []
+    test_text = ""
+    if tests_file and os.path.exists(tests_file):
+        with open(tests_file, encoding="utf-8") as f:
+            test_text = f.read()
+    for name in sorted(os.listdir(kernels_dir)):
+        pkg = os.path.join(kernels_dir, name)
+        main = os.path.join(pkg, f"{name}.py")
+        if not os.path.isdir(pkg) or not os.path.exists(main):
+            continue
+        ref_path = os.path.join(pkg, "ref.py")
+        ref_names: Set[str] = set()
+        if os.path.exists(ref_path):
+            with open(ref_path, encoding="utf-8") as f:
+                ref_tree = ast.parse(f.read(), filename=ref_path)
+            ref_names = {
+                n.name for n in ref_tree.body
+                if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+            }
+        for kernel in _public_kernels(main):
+            stem = kernel[: -len("_kernel")]
+            rel = f"{rel_prefix}/{name}/{name}.py"
+            if f"{stem}_ref" not in ref_names:
+                out.append(Diagnostic(
+                    "kernel-ref-missing",
+                    f"Pallas kernel {kernel} has no pure-jnp twin "
+                    f"{stem}_ref in {name}/ref.py",
+                    where=f"{rel}::{kernel}::ref",
+                    hint="add the ref twin; the differential harness needs it",
+                ))
+            if test_text and kernel not in test_text:
+                out.append(Diagnostic(
+                    "kernel-test-missing",
+                    f"Pallas kernel {kernel} is not referenced by the parity "
+                    "suite tests/test_kernels.py",
+                    where=f"{rel}::{kernel}::test",
+                    hint="add an interpret=True kernel-vs-ref parity test",
+                ))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Entry points
+# ---------------------------------------------------------------------------
+
+def lint_source(src: str, relpath: str) -> List[Diagnostic]:
+    """Lint one module's source text (host-sync / traced-branch / queue-dtype)."""
+    tree = ast.parse(src, filename=relpath)
+    traced = _collect_traced(tree)
+    quals = _qualnames(tree)
+    out: List[Diagnostic] = []
+    # Nested defs inside traced functions are traced too (with no static
+    # params of their own — their closure variables stay untainted anyway).
+    closure: Dict[ast.AST, Set[str]] = {}
+    for fn, static in traced.items():
+        closure.setdefault(fn, set()).update(static)
+        for sub in ast.walk(fn):
+            if isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                closure.setdefault(sub, set())
+    for fn in sorted(closure, key=lambda n: (n.lineno, quals.get(n, ""))):
+        out.extend(_FnLinter(fn, relpath, quals.get(fn, fn.name),
+                             closure[fn]).run())
+    out.extend(_lint_queue_dtypes(tree, relpath, quals))
+    return out
+
+
+def lint_file(path: str, root: str) -> List[Diagnostic]:
+    rel = os.path.relpath(path, root).replace(os.sep, "/")
+    with open(path, encoding="utf-8") as f:
+        return lint_source(f.read(), rel)
+
+
+def lint_tree(root: str, tests_file: Optional[str] = None) -> List[Diagnostic]:
+    """Lint every ``*.py`` under ``root`` (the ``src/repro`` package) plus the
+    kernel ref-twin contract."""
+    out: List[Diagnostic] = []
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames.sort()
+        dirnames[:] = [d for d in dirnames if d != "__pycache__"]
+        for fname in sorted(filenames):
+            if fname.endswith(".py"):
+                out.extend(lint_file(os.path.join(dirpath, fname), root))
+    kernels_dir = os.path.join(root, "kernels")
+    if os.path.isdir(kernels_dir):
+        out.extend(check_kernel_twins(kernels_dir, tests_file))
+    return out

@@ -41,6 +41,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
+from repro.analysis.flowcheck import verify_flow
 from repro.core import operators as ops_mod
 from repro.core.dataflow import Dataflow, OpDesc, merge_flows, translate
 from repro.core.optimizer import optimal_plan
@@ -709,6 +710,7 @@ class DistributedEngine:
         and accounting separable. Returns per-tenant counts in input order."""
         flows = [self._to_flow(q, space) for q in queries]
         merged, tenant_of_op = merge_flows(flows)
+        verify_flow(merged)  # the merged multi-sink DAG must also be well-formed
         runtimes, st = self._execute(merged, tenant_of_op)
         counts = []
         for i in merged.sink_indices():
@@ -723,14 +725,19 @@ class DistributedEngine:
         self, query_or_plan: QueryGraph | ExecutionPlan | Dataflow, space: str
     ) -> Dataflow:
         if isinstance(query_or_plan, Dataflow):
-            return query_or_plan
-        if isinstance(query_or_plan, QueryGraph):
-            plan = optimal_plan(
-                query_or_plan, GraphStats.from_graph(self.graph), self.p, space
-            )
+            flow = query_or_plan
         else:
-            plan = query_or_plan
-        return translate(plan)
+            if isinstance(query_or_plan, QueryGraph):
+                plan = optimal_plan(
+                    query_or_plan, GraphStats.from_graph(self.graph), self.p, space
+                )
+            else:
+                plan = query_or_plan
+            flow = translate(plan)
+        # Mandatory pre-flight: structural verification before any device
+        # work (queue pricing is the single-host engine's concern).
+        verify_flow(flow)
+        return flow
 
     def _execute(
         self, flow: Dataflow, tenant_of_op: Optional[Tuple[int, ...]] = None

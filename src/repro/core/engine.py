@@ -781,6 +781,15 @@ class HugeEngine:
         slot-slice of device queues and its own stats (the multi-tenant
         substrate; see serve/graph_service.py)."""
         flow = self.to_flow(query_or_plan, space, stats)
+        # Mandatory pre-flight (DESIGN.md §Static-analysis): a malformed flow
+        # must fail here with structured diagnostics, not mid-run on device.
+        # Imported lazily — analysis.flowcheck imports core.dataflow, and the
+        # repro.core package itself imports this module.
+        from repro.analysis.flowcheck import verify_flow
+
+        verify_flow(flow, cfg=self.cfg, d_pad=self.d_pad,
+                    queue_capacity=queue_capacity,
+                    join_buffer_capacity=join_buffer_capacity)
         return EngineSession(
             self, flow, stats=session_stats,
             queue_capacity=queue_capacity,

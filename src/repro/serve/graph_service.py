@@ -35,9 +35,13 @@ import dataclasses
 import itertools
 import time
 from collections import deque
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
+from repro.analysis.diagnostics import Diagnostic, FlowcheckError, errors
+from repro.analysis.flowcheck import check_plan, check_query, verify_flow
 from repro.core.cost import GraphStats
+from repro.core.dataflow import Dataflow
+from repro.core.plan import ExecutionPlan
 from repro.core.engine import (
     EngineConfig,
     EngineSession,
@@ -73,14 +77,17 @@ class TenantBudget:
 class GraphQueryRequest:
     """One tenant's enumeration request.
 
-    ``query`` is a :class:`QueryGraph` or a name in ``PAPER_QUERIES`` (q1..q8
-    / "triangle"). ``match_budget`` stops the query once at least that many
-    matches have been produced (batch-granular: the reported count may
-    overshoot by up to the in-flight batches of the tick that crossed the
-    line, never undershoot)."""
+    ``query`` is a :class:`QueryGraph`, a name in ``PAPER_QUERIES`` (q1..q8
+    / "triangle"), or — for tenants that bring their own planning — an
+    :class:`ExecutionPlan` or raw :class:`Dataflow`; all forms pass the same
+    flowcheck pre-flight at admission, so a malformed submission is rejected
+    with structured diagnostics before any queue is leased. ``match_budget``
+    stops the query once at least that many matches have been produced
+    (batch-granular: the reported count may overshoot by up to the in-flight
+    batches of the tick that crossed the line, never undershoot)."""
 
     tenant: str
-    query: QueryGraph | str
+    query: QueryGraph | ExecutionPlan | Dataflow | str
     space: str = "huge"
     match_budget: Optional[int] = None
 
@@ -99,6 +106,9 @@ class QueryTicket:
     queue_cells: int = 0
     stats: Optional[EngineStats] = None
     error: Optional[str] = None
+    # Structured flowcheck findings when the request was rejected at
+    # admission (rule ids + hints; see repro.analysis.diagnostics).
+    diagnostics: Tuple[Diagnostic, ...] = ()
 
     @property
     def latency_s(self) -> Optional[float]:
@@ -182,8 +192,8 @@ class GraphService:
 
     # -- submission / admission ----------------------------------------------
 
-    def _resolve_query(self, req: GraphQueryRequest) -> QueryGraph:
-        if isinstance(req.query, QueryGraph):
+    def _resolve_query(self, req: GraphQueryRequest) -> QueryGraph | ExecutionPlan | Dataflow:
+        if isinstance(req.query, (QueryGraph, ExecutionPlan, Dataflow)):
             return req.query
         if req.query in PAPER_QUERIES:
             return PAPER_QUERIES[req.query]
@@ -221,12 +231,31 @@ class GraphService:
         return ticket
 
     def _price(self, ticket: QueryTicket):
-        """Plan once, price once: ``(cells, flow)`` the request's session
-        will lease/execute (cached so waiting tickets aren't re-planned
-        every admission sweep)."""
+        """Plan once, verify once, price once: ``(cells, flow)`` the
+        request's session will lease/execute (cached so waiting tickets
+        aren't re-planned every admission sweep).
+
+        Raises :class:`FlowcheckError` when the submission fails static
+        verification — query/plan checks for self-planned forms, then the
+        full dataflow check — so ``_try_admit`` can reject with the rule
+        ids *before* touching the slot pool."""
         if ticket.id not in self._planned:
             req = ticket.request
-            flow = self.engine.to_flow(self._resolve_query(req), req.space, self.gstats)
+            target = self._resolve_query(req)
+            if isinstance(target, QueryGraph):
+                bad = errors(check_query(target))
+                if bad:
+                    raise FlowcheckError(bad)
+            elif isinstance(target, ExecutionPlan):
+                bad = errors(check_plan(target))
+                if bad:
+                    raise FlowcheckError(bad)
+            flow = self.engine.to_flow(target, req.space, self.gstats)
+            verify_flow(
+                flow, cfg=self.engine.cfg, d_pad=self.engine.d_pad,
+                queue_capacity=self.cfg.queue_capacity,
+                join_buffer_capacity=self.cfg.join_buffer_capacity,
+            )
             cells = flow_queue_cells(
                 flow, self.engine.cfg, self.engine.d_pad,
                 self.cfg.queue_capacity, self.cfg.join_buffer_capacity,
@@ -248,13 +277,27 @@ class GraphService:
                 continue
             req = ticket.request
             budget = self._budget(req.tenant)
-            cells, flow = self._price(ticket)
+            try:
+                cells, flow = self._price(ticket)
+            except FlowcheckError as e:
+                # Malformed submission: reject with the structured findings.
+                # Nothing was leased, so the pool is untouched.
+                ticket.diagnostics = e.diagnostics
+                rules = ", ".join(sorted({d.rule for d in e.diagnostics}))
+                self._reject(ticket, f"flowcheck rejected query ({rules}): {e}")
+                continue
             if budget.max_queue_cells is not None and cells > budget.max_queue_cells:
                 self._reject(ticket,
                              f"query needs {cells} cells > tenant cap "
                              f"{budget.max_queue_cells}")
                 continue
             if cells > self.pool.total_cells:
+                ticket.diagnostics = (Diagnostic(
+                    "queue-over-pool",
+                    f"flow preallocates {cells} int32 queue cells > service "
+                    f"pool {self.pool.total_cells}",
+                    hint="shrink queue/join-buffer capacities or split the query",
+                ),)
                 self._reject(ticket,
                              f"query needs {cells} cells > service pool "
                              f"{self.pool.total_cells}")

@@ -1,0 +1,159 @@
+"""Flowcheck static-verifier tests (repro/analysis/flowcheck.py).
+
+Three legs:
+
+* clean inputs — optimiser/translator output for paper queries must produce
+  zero findings, and the engines' mandatory pre-flight must not reject them;
+* seeded bad fixtures — each known-malformed plan/dataflow must fire exactly
+  the expected rule id(s);
+* service admission — a malformed tenant submission is rejected with
+  structured diagnostics at admission, without leaking a slot-pool lease or
+  the tenant's inflight count, and without disturbing well-formed tenants.
+"""
+import dataclasses
+
+import pytest
+
+from repro.analysis import fixtures
+from repro.analysis.diagnostics import Diagnostic, FlowcheckError, errors
+from repro.analysis.flowcheck import check_flow, check_plan, check_query, verify_flow
+from repro.core.cost import GraphStats
+from repro.core.dataflow import Dataflow, OpDesc, merge_flows, translate
+from repro.core.engine import EngineConfig, HugeEngine
+from repro.core.optimizer import optimal_plan
+from repro.core.query import PAPER_QUERIES, QueryGraph, triangle
+from repro.graph import powerlaw_graph
+from repro.serve.graph_service import (
+    DONE,
+    REJECTED,
+    GraphQueryRequest,
+    GraphService,
+    ServiceConfig,
+)
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return powerlaw_graph(256, 5.0, seed=3)
+
+
+STATS = GraphStats.synthetic(1 << 10, 6.0)
+
+
+# ---------------------------------------------------------------------------
+# clean inputs verify clean
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("qname", ["q1", "q2", "q5", "q8"])
+@pytest.mark.parametrize("space", ["huge", "seed", "bigjoin"])
+def test_planner_output_verifies(qname, space):
+    plan = optimal_plan(PAPER_QUERIES[qname], STATS, 8, space)
+    assert errors(check_plan(plan)) == []
+    flow = translate(plan)
+    assert errors(check_flow(flow)) == []
+
+
+def test_merged_flow_verifies():
+    flows = [translate(optimal_plan(PAPER_QUERIES[q], STATS, 8, "huge"))
+             for q in ("q1", "q2")]
+    merged, _ = merge_flows(flows)
+    assert errors(check_flow(merged)) == []
+
+
+def test_queue_pricing_within_budget():
+    flow = translate(optimal_plan(PAPER_QUERIES["q1"], STATS, 8, "huge"))
+    diags = check_flow(flow, cfg=EngineConfig(), d_pad=64,
+                       max_cells=ServiceConfig().total_queue_cells)
+    assert errors(diags) == []
+
+
+def test_engine_preflight_accepts_good_query(graph):
+    eng = HugeEngine(graph, EngineConfig(num_machines=4, batch_size=256))
+    res = eng.run(triangle())
+    assert res.count > 0
+
+
+# ---------------------------------------------------------------------------
+# seeded bad fixtures fire the expected rules
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(
+    n for n in fixtures.FIXTURES if n != "bad-kernel-source"))
+def test_fixture_fires_expected_rules(name):
+    diags, expected = fixtures.run_fixture(name)
+    fired = {d.rule for d in diags}
+    for rule in expected:
+        assert rule in fired, f"{name}: {rule} missing from {sorted(fired)}"
+    assert all(isinstance(d, Diagnostic) for d in diags)
+
+
+def test_query_checks():
+    assert {d.rule for d in check_query(QueryGraph.from_edges([(0, 1), (2, 3)]))} \
+        == {"query-disconnected"}
+    empty = dataclasses.replace(triangle(), edges=frozenset())
+    assert "query-empty" in {d.rule for d in check_query(empty)}
+
+
+def test_engine_preflight_rejects_bad_flow(graph):
+    eng = HugeEngine(graph, EngineConfig(num_machines=4))
+    with pytest.raises(FlowcheckError) as ei:
+        eng.prepare(fixtures.bad_join_key_flow())
+    assert any(d.rule == "join-key-incompatible" for d in ei.value.diagnostics)
+
+
+def test_verify_flow_error_carries_diagnostics():
+    with pytest.raises(FlowcheckError) as ei:
+        verify_flow(fixtures.dangling_sink_flow())
+    assert any(d.rule == "orphan-op" for d in ei.value.diagnostics)
+    assert "orphan-op" in str(ei.value)
+
+
+def test_sinkless_flow_rejected():
+    flow = Dataflow(ops=[OpDesc(kind="scan", schema=(0, 1), scan_edge=(0, 1))],
+                    query_name="sinkless")
+    assert "no-sink" in {d.rule for d in check_flow(flow)}
+
+
+# ---------------------------------------------------------------------------
+# service admission: structured rejection, no leaked leases
+# ---------------------------------------------------------------------------
+
+def _svc(graph, **kw):
+    base = dict(queue_capacity=1 << 10, join_buffer_capacity=1 << 12,
+                tick_steps=16, max_active=4)
+    base.update(kw)
+    return GraphService(graph, ServiceConfig(**base))
+
+
+def test_service_rejects_malformed_dataflow_at_admission(graph):
+    svc = _svc(graph)
+    t = svc.submit(GraphQueryRequest(tenant="adv", query=fixtures.bad_join_key_flow()))
+    assert t.status == "queued"
+    svc.tick()
+    assert t.status == REJECTED
+    assert any(d.rule == "join-key-incompatible" for d in t.diagnostics)
+    assert "flowcheck" in t.error
+    # nothing leased, tenant inflight released, no active session left behind
+    assert svc.pool.leased_cells == 0
+    assert svc.tenant_usage("adv")["inflight"] == 0
+    assert not svc.active
+
+
+def test_service_rejects_disconnected_plan_at_admission(graph):
+    svc = _svc(graph)
+    t = svc.submit(GraphQueryRequest(tenant="adv", query=fixtures.disconnected_plan()))
+    svc.tick()
+    assert t.status == REJECTED
+    assert any(d.rule == "subquery-disconnected" for d in t.diagnostics)
+    assert svc.pool.leased_cells == 0
+
+
+def test_service_still_serves_good_tenants_after_rejection(graph):
+    svc = _svc(graph)
+    bad = svc.submit(GraphQueryRequest(tenant="adv", query=fixtures.pull_join_flow()))
+    good = svc.submit(GraphQueryRequest(tenant="ok", query="q1"))
+    svc.run_until_idle()
+    assert bad.status == REJECTED
+    assert any(d.rule == "comm-illegal" for d in bad.diagnostics)
+    assert good.status == DONE and good.count > 0
+    assert svc.pool.leased_cells == 0  # everything released at idle

@@ -1,0 +1,174 @@
+"""Tracer-safety lint tests (repro/analysis/tracelint.py).
+
+Covers: the seeded bad-source fixture fires every rule; trace-time-static
+constructs (shape branching, static_argnames params, closure flags) are NOT
+flagged; queue-dtype drift detection; baseline suppression round-trip; and
+the repo acceptance check — src/repro lints clean against the checked-in
+baseline file.
+"""
+import os
+import textwrap
+
+import repro
+from repro.analysis.diagnostics import load_baseline, split_baselined
+from repro.analysis.fixtures import BAD_TRACED_SOURCE
+from repro.analysis.tracelint import check_kernel_twins, lint_source, lint_tree
+
+SRC_ROOT = os.path.dirname(os.path.abspath(repro.__file__))
+REPO_ROOT = os.path.dirname(os.path.dirname(SRC_ROOT))
+BASELINE = os.path.join(REPO_ROOT, "analysis", "baseline.txt")
+KERNEL_TESTS = os.path.join(REPO_ROOT, "tests", "test_kernels.py")
+
+
+def _rules(diags):
+    return {d.rule for d in diags}
+
+
+# ---------------------------------------------------------------------------
+# seeded bad source fires every rule
+# ---------------------------------------------------------------------------
+
+def test_bad_source_fires_all_rules():
+    diags = lint_source(BAD_TRACED_SOURCE, "fixture.py")
+    assert {"traced-branch", "host-sync", "queue-dtype"} <= _rules(diags)
+
+
+def test_traced_branch_symbols():
+    diags = lint_source(BAD_TRACED_SOURCE, "fixture.py")
+    symbols = {d.where.rsplit("::", 1)[-1] for d in diags if d.rule == "traced-branch"}
+    assert {"if", "assert"} <= symbols
+
+
+def test_host_sync_variants():
+    src = textwrap.dedent("""\
+        import jax, numpy as np
+
+        @jax.jit
+        def f(x):
+            a = int(x.sum())
+            b = x.item()
+            c = np.asarray(x)
+            return a, b, c
+    """)
+    diags = [d for d in lint_source(src, "m.py") if d.rule == "host-sync"]
+    symbols = {d.where.rsplit("::", 1)[-1] for d in diags}
+    assert {"int", "item", "np.asarray"} <= symbols
+
+
+# ---------------------------------------------------------------------------
+# trace-time-static constructs are NOT flagged
+# ---------------------------------------------------------------------------
+
+def test_shape_branching_not_flagged():
+    src = textwrap.dedent("""\
+        import jax, jax.numpy as jnp
+
+        @jax.jit
+        def f(x):
+            b, d = x.shape
+            assert b % 8 == 0
+            if d > 16:
+                x = x[:, :16]
+            if len(x.shape) == 2:
+                x = x[None]
+            n = x.ndim
+            while n > 3:
+                n -= 1
+            return x
+    """)
+    assert lint_source(src, "m.py") == []
+
+
+def test_static_argnames_not_tainted():
+    src = textwrap.dedent("""\
+        import functools, jax, jax.numpy as jnp
+
+        @functools.partial(jax.jit, static_argnames=("use_kernel", "cap"))
+        def f(x, use_kernel, cap):
+            if use_kernel:
+                x = x * 2
+            assert cap > 0
+            if x.sum() > 0:   # still flagged: x IS a tracer
+                x = -x
+            return x
+    """)
+    diags = lint_source(src, "m.py")
+    assert len([d for d in diags if d.rule == "traced-branch"]) == 1
+
+
+def test_closure_flags_not_tainted():
+    src = textwrap.dedent("""\
+        import jax
+
+        def build(causal):
+            @jax.jit
+            def f(x):
+                if causal:
+                    x = x + 1
+                return x
+            return f
+    """)
+    assert lint_source(src, "m.py") == []
+
+
+def test_untraced_function_not_linted():
+    src = textwrap.dedent("""\
+        def plain(x):
+            if x > 0:
+                return int(x)
+            return 0
+    """)
+    assert lint_source(src, "m.py") == []
+
+
+# ---------------------------------------------------------------------------
+# queue dtype drift
+# ---------------------------------------------------------------------------
+
+def test_queue_dtype_missing_and_wrong():
+    src = textwrap.dedent("""\
+        import jax.numpy as jnp
+        from repro.graph.storage import INVALID
+
+        def make(cap, k):
+            queue_buf = jnp.full((cap, k), INVALID)
+            bad_buf = jnp.full((cap, k), INVALID, jnp.int64)
+            good_buf = jnp.full((cap, k), INVALID, jnp.int32)
+            other = jnp.full((cap, k), 0.0)
+            return queue_buf, bad_buf, good_buf, other
+    """)
+    diags = [d for d in lint_source(src, "m.py") if d.rule == "queue-dtype"]
+    names = {d.where.rsplit("::", 1)[-1] for d in diags}
+    assert names == {"queue_buf", "bad_buf"}
+
+
+# ---------------------------------------------------------------------------
+# kernel twin contract
+# ---------------------------------------------------------------------------
+
+def test_kernel_twins_on_real_tree():
+    diags = check_kernel_twins(os.path.join(SRC_ROOT, "kernels"), KERNEL_TESTS)
+    # the only allowed gap is the baselined flash_attention ref naming
+    keys = {d.key() for d in diags}
+    baseline = load_baseline(BASELINE)
+    assert keys <= set(baseline), f"unbaselined kernel findings: {keys - set(baseline)}"
+
+
+# ---------------------------------------------------------------------------
+# baseline round-trip + repo acceptance
+# ---------------------------------------------------------------------------
+
+def test_baseline_suppression(tmp_path):
+    diags = lint_source(BAD_TRACED_SOURCE, "fixture.py")
+    bl = tmp_path / "bl.txt"
+    bl.write_text("".join(f"{d.key()}  # justified\n" for d in diags))
+    new, suppressed = split_baselined(diags, load_baseline(str(bl)))
+    assert new == [] and len(suppressed) == len(diags)
+
+
+def test_repo_lints_clean_against_baseline():
+    findings = lint_tree(SRC_ROOT, KERNEL_TESTS)
+    baseline = load_baseline(BASELINE)
+    new = [d for d in findings if d.key() not in baseline and d.severity == "error"]
+    assert new == [], "unbaselined lint findings:\n" + "\n".join(
+        d.format() for d in new)
