@@ -1,0 +1,145 @@
+"""Streaming benchmark: delta-plan enumeration vs. full re-enumeration.
+
+The ROADMAP streaming item made concrete: a power-law graph receives a
+stream of edge-insert batches; after every batch a standing query's new
+matches must be delivered. The incremental path applies the batch with the
+row-local ``apply_updates`` and runs the k-flow delta decomposition
+(``run_delta``); the baseline re-enumerates the whole post-batch graph and
+diffs. Both deliver the same new matches, so the figure of merit is
+*new-matches/sec* per path — delta work scales with the batch, full work
+with the graph, so the advantage grows as batches shrink (EXPERIMENTS.md
+§Streaming; the acceptance bar is ≥5× at the small batch size).
+
+  PYTHONPATH=src python -m benchmarks.exp_streaming            # default sweep
+  PYTHONPATH=src python -m benchmarks.exp_streaming --smoke    # CI scale
+
+Per (query, batch-size) case the stream's first batch is a discarded warmup
+(jit compile for both paths); timed batches check that the summed delta
+counts equal the full-enumeration diff before recording anything.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from benchmarks.common import bench_graph, emit, record_bench
+from repro.core.engine import EngineConfig, HugeEngine
+from repro.core.query import PAPER_QUERIES
+from repro.graph import build_graph
+from repro.graph.storage import GraphUpdateBatch
+
+
+def undirected_edges(graph) -> np.ndarray:
+    """Extract the undirected edge array ``int[E, 2]`` from a built graph."""
+    offs = np.asarray(graph.offsets)
+    nbrs = np.asarray(graph.nbrs)
+    src = np.repeat(np.arange(graph.num_vertices), np.diff(offs))
+    und = np.stack([src, nbrs], axis=1)
+    return und[und[:, 0] < und[:, 1]]
+
+
+def run_case(und: np.ndarray, n: int, qname: str, batch_edges: int,
+             batches: int, cfg: EngineConfig, seed: int) -> dict:
+    """Stream ``batches`` batches of ``batch_edges`` edges onto a base graph;
+    time delta enumeration vs. full re-enumeration after each batch."""
+    rng = np.random.default_rng(seed)
+    und = und[rng.permutation(len(und))]
+    tail = (batches + 1) * batch_edges  # +1: warmup batch
+    base, stream = und[:-tail], und[-tail:]
+    chunks = np.array_split(stream, batches + 1)
+
+    q = PAPER_QUERIES[qname]
+    eng = HugeEngine(build_graph(base, n), cfg)
+
+    # The baseline re-enumerates from scratch, so it pays a fresh engine
+    # (planning, scan arrays, caches) per batch — exactly what a non-
+    # incremental deployment would do. Engine stats are cumulative per
+    # engine, so the baseline needs a fresh one for a per-batch count anyway.
+    def full_count(graph):
+        return HugeEngine(graph, cfg).run(q).count
+
+    # Warmup batch: compiles both paths; its counts are excluded below.
+    eng.apply_updates(GraphUpdateBatch(chunks[0]))
+    eng.run_delta(q)
+    c_prev = full_count(eng.graph)
+
+    delta_s = full_s = apply_s = 0.0
+    new_matches = 0
+    for chunk in chunks[1:]:
+        t0 = time.perf_counter()
+        eng.apply_updates(GraphUpdateBatch(chunk))
+        apply_s += time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        r = eng.run_delta(q)
+        delta_s += time.perf_counter() - t0
+        new_matches += r.count
+
+        t0 = time.perf_counter()
+        c_now = full_count(eng.graph)
+        full_s += time.perf_counter() - t0
+
+    assert new_matches == c_now - c_prev, (qname, new_matches, c_now - c_prev)
+    return {
+        "query": qname,
+        "batch_edges": batch_edges,
+        "batches": batches,
+        "vertices": n,
+        "new_matches": new_matches,
+        "delta_s": delta_s,
+        "full_s": full_s,
+        "apply_s": apply_s,
+        "delta_matches_per_s": new_matches / max(delta_s, 1e-9),
+        "full_matches_per_s": new_matches / max(full_s, 1e-9),
+        "speedup": full_s / max(delta_s, 1e-9),
+    }
+
+
+def main(argv=None) -> list:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--vertices", type=int, default=1 << 12)
+    ap.add_argument("--deg", type=float, default=6.0)
+    ap.add_argument("--queries", nargs="+", default=["q1", "q2"])
+    ap.add_argument("--batch-edges", nargs="+", type=int, default=[8, 64])
+    ap.add_argument("--batches", type=int, default=3,
+                    help="timed batches per case (one warmup batch on top)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI scale: 512-vertex graph, q1, one small batch size")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        args.vertices, args.queries = 512, ["q1"]
+        args.batch_edges, args.batches = [8], 2
+
+    graph = bench_graph(args.vertices, args.deg, seed=7)
+    und = undirected_edges(graph)
+    cfg = EngineConfig(batch_size=256, materialize=False)
+
+    entries = []
+    for qname in args.queries:
+        for b in args.batch_edges:
+            out = run_case(und, args.vertices, qname, b, args.batches, cfg,
+                           seed=100 + b)
+            entries.append(dict(suite="exp_streaming", case=f"{qname}_b{b}", **out))
+            emit(f"streaming/{qname}_b{b}/delta", out["delta_s"] * 1e6 / args.batches,
+                 f"{out['delta_matches_per_s']:.0f}mps")
+            emit(f"streaming/{qname}_b{b}/full", out["full_s"] * 1e6 / args.batches,
+                 f"speedup={out['speedup']:.1f}x")
+            print(
+                f"[streaming] {qname} batch={b}: {out['new_matches']} new matches, "
+                f"delta {out['delta_matches_per_s']:,.0f}/s vs full "
+                f"{out['full_matches_per_s']:,.0f}/s → {out['speedup']:.1f}x "
+                f"(apply {out['apply_s'] * 1e3:.1f}ms total)"
+            )
+    record_bench("streaming", entries)
+
+    small = min(e["batch_edges"] for e in entries)
+    worst = min(e["speedup"] for e in entries if e["batch_edges"] == small)
+    print(f"[streaming] min speedup at batch={small}: {worst:.1f}x")
+    return entries
+
+
+if __name__ == "__main__":
+    main()

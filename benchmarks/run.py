@@ -29,6 +29,7 @@ from benchmarks import (
     exp10_scaling,
     exp_dist_hybrid,
     exp_service_load,
+    exp_streaming,
     table1_comm_modes,
     table4_throughput,
 )
@@ -44,6 +45,7 @@ SUITES = {
     "exp10": exp10_scaling,
     "exp_dist_hybrid": exp_dist_hybrid,
     "exp_service_load": exp_service_load,
+    "exp_streaming": exp_streaming,
     "table4": table4_throughput,
 }
 

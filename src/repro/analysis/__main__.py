@@ -53,6 +53,8 @@ RULES = {
     "join-schema": "join output schema is not left + right_extra",
     "join-cross-bounds": "cross filter indexes outside the output schema",
     "comm-illegal": "op comm mode illegal per Eq. 3 (§5.2 rewrites pull joins)",
+    "epoch-illegal": "bad scan_epoch/ext_epochs tag, or epoch on the wrong op kind",
+    "epoch-no-delta-scan": "'old'-epoch probe without a delta-seeded ancestor scan",
     "queue-over-pool": "queue plan exceeds the Theorem-5.4 / slot-pool budget",
     # flowcheck — plan/query
     "query-empty": "query has no edges",

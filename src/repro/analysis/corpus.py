@@ -1,4 +1,5 @@
-"""Clean-tree flowcheck corpus: every paper query under every plan space.
+"""Clean-tree flowcheck corpus: every paper query under every plan space,
+plus each query's merged delta-flow decomposition (DESIGN.md §Delta-plans).
 
 This is what ``python -m repro.analysis --flowcheck`` (and the flowcheck
 stamp in ``benchmarks.common.record_bench``) verifies: the optimiser and
@@ -16,7 +17,7 @@ from typing import List, Tuple
 from repro.analysis.diagnostics import Diagnostic
 from repro.analysis.flowcheck import check_flow, check_plan
 from repro.core.cost import GraphStats
-from repro.core.dataflow import translate
+from repro.core.dataflow import delta_flows, merge_flows, translate
 from repro.core.optimizer import optimal_plan
 from repro.core.plan import PLAN_SPACES
 from repro.core.query import PAPER_QUERIES
@@ -65,6 +66,26 @@ def _corpus_findings_cached() -> Tuple[Diagnostic, ...]:
             ))
             continue
         for d in check_flow(flow, cfg=cfg, d_pad=_CORPUS_D_PAD, max_cells=pool):
+            out.append(Diagnostic(d.rule, d.message, d.severity,
+                                  where=f"{where}/op[{d.op_index}]", hint=d.hint))
+    # Delta leg: the merged k-sink delta decomposition of each paper query
+    # (the flow a standing query re-runs per batch) must also verify clean —
+    # epochs, schemas, and queue pricing alike. The flows are batch-
+    # independent, so one plan per query suffices.
+    for qname in PAPER_QUERIES:
+        where = f"corpus::{qname}/delta"
+        try:
+            plan = optimal_plan(PAPER_QUERIES[qname], stats, _CORPUS_MACHINES,
+                                "huge")
+            merged, _ = merge_flows(delta_flows(plan))
+        except Exception as e:  # noqa: BLE001
+            out.append(Diagnostic(
+                "translate-failure",
+                f"delta decomposition failed: {type(e).__name__}: {e}",
+                where=where,
+            ))
+            continue
+        for d in check_flow(merged, cfg=cfg, d_pad=_CORPUS_D_PAD, max_cells=pool):
             out.append(Diagnostic(d.rule, d.message, d.severity,
                                   where=f"{where}/op[{d.op_index}]", hint=d.hint))
     return tuple(out)

@@ -87,6 +87,18 @@ def oversized_queue_flow() -> Dataflow:
     return Dataflow(ops=ops, query_name="fixture-oversized-queues")
 
 
+def bad_delta_epoch_flow() -> Dataflow:
+    """A would-be delta flow seeded from a *full* scan: its 'old'-epoch
+    extend silently drops matches (the old/new split only deduplicates
+    matches rooted at a Δ-edge), and one epoch tag is misspelled."""
+    return Dataflow(ops=[
+        _scan(0, 1),                                 # scan_epoch="full"
+        OpDesc(kind="extend", schema=(0, 1, 2), inputs=(0,), ext=(0, 1),
+               new_vertex=2, comm="pull", ext_epochs=("old", "stale")),
+        OpDesc(kind="sink", schema=(0, 1, 2), inputs=(1,)),
+    ], query_name="fixture-bad-delta-epoch")
+
+
 def disconnected_plan() -> ExecutionPlan:
     """Plan whose join unit is a disconnected edge set (extend order leaves
     the matched prefix)."""
@@ -138,6 +150,8 @@ FIXTURES: Dict[str, Tuple[Callable[[], List[Diagnostic]], Tuple[str, ...]]] = {
                             ("ext-disconnected",)),
     "pull-join": (lambda: check_flow(pull_join_flow()), ("comm-illegal",)),
     "oversized-queues": (lambda: _run_oversized(), ("queue-over-pool",)),
+    "bad-delta-epoch": (lambda: check_flow(bad_delta_epoch_flow()),
+                        ("epoch-illegal", "epoch-no-delta-scan")),
     "disconnected-plan": (lambda: check_plan(disconnected_plan()),
                           ("subquery-disconnected",)),
     "illegal-eq3": (lambda: check_plan(illegal_eq3_plan()), ("eq3-illegal",)),

@@ -22,6 +22,12 @@ Checks, *without executing* (DESIGN.md §Static-analysis):
 * Eq.-3 comm-mode legality — a materialised join node must be ``push``
   (§5.2 rewrites every pulling join into VERIFY + PULL-EXTENDs before the
   dataflow exists), extends are local/pull/push, scans local;
+* delta-epoch legality — only scans carry a ``scan_epoch`` and it is
+  ``full`` or ``delta``; ``ext_epochs`` appears only on extend/verify, tags
+  every probed adjacency list with ``old``/``new``, and an op probing the
+  ``old`` epoch must descend from a delta-seeded scan (the old/new split is
+  meaningful only in the exactly-once delta decomposition, DESIGN.md
+  §Delta-plans);
 * queue-cell accounting — ``engine.flow_queue_cells`` totals against the
   configured Theorem-5.4 bound and/or a ``QueueSlotPool`` capacity, so a
   query that could never be admitted is diagnosed before any lease.
@@ -284,6 +290,67 @@ def _check_comm(flow: Dataflow, out: List[Diagnostic]) -> None:
             ))
 
 
+_SCAN_EPOCHS = ("full", "delta")
+_EXT_EPOCHS = ("old", "new")
+
+
+def _check_epochs(flow: Dataflow, out: List[Diagnostic]) -> None:
+    """Delta-flow epoch legality (DESIGN.md §Delta-plans). A delta dataflow
+    is seeded from the update batch (``scan_epoch="delta"``) and threads
+    old/new adjacency epochs through its extends/verifies so the k flows of
+    a k-edge query emit each new match exactly once; epoch tags anywhere
+    else mean a hand-built or mis-merged flow."""
+    ops = flow.ops
+    for i, op in enumerate(ops):
+        if op.kind == "scan":
+            if op.scan_epoch not in _SCAN_EPOCHS:
+                out.append(_diag(
+                    "epoch-illegal", i,
+                    f"scan_epoch {op.scan_epoch!r}; a scan is seeded from "
+                    f"{_SCAN_EPOCHS} (whole graph vs. update batch)",
+                ))
+        elif op.scan_epoch != "full":
+            out.append(_diag(
+                "epoch-illegal", i,
+                f"{op.kind} carries scan_epoch={op.scan_epoch!r}; only scans "
+                "are seeded from an epoch",
+            ))
+        if not op.ext_epochs:
+            continue
+        if op.kind not in ("extend", "verify"):
+            out.append(_diag(
+                "epoch-illegal", i,
+                f"{op.kind} carries ext_epochs={op.ext_epochs}; only "
+                "extend/verify probe adjacency epochs",
+            ))
+            continue
+        bad = [e for e in op.ext_epochs if e not in _EXT_EPOCHS]
+        if bad:
+            out.append(_diag(
+                "epoch-illegal", i,
+                f"unknown adjacency epoch(s) {bad}; each probed query edge "
+                "reads 'old' (pre-batch) or 'new' (post-batch) adjacency",
+            ))
+        if len(op.ext_epochs) != len(op.ext):
+            out.append(_diag(
+                "epoch-illegal", i,
+                f"{len(op.ext_epochs)} epoch tags for {len(op.ext)} probed "
+                "adjacency lists; ext_epochs must tag every ext position",
+            ))
+        if "old" in op.ext_epochs and not any(
+            ops[j].kind == "scan" and ops[j].scan_epoch == "delta"
+            for j in flow.ancestors(i)
+        ):
+            out.append(_diag(
+                "epoch-no-delta-scan", i,
+                "op probes the 'old' adjacency epoch but no ancestor scan "
+                "is seeded from the delta batch: the old/new split only "
+                "deduplicates matches rooted at a Δ-edge, so on a full scan "
+                "it silently drops matches",
+                "seed the flow from a delta scan (dataflow.delta_flows)",
+            ))
+
+
 def check_flow(
     flow: Dataflow,
     *,
@@ -303,6 +370,7 @@ def check_flow(
     if _check_dag(flow, out):
         _check_schemas(flow, out)
         _check_comm(flow, out)
+        _check_epochs(flow, out)
     if cfg is not None and d_pad is not None and not errors(out):
         # engine imports this module for its pre-flight; keep the reverse
         # dependency lazy to avoid the cycle.
@@ -312,8 +380,10 @@ def check_flow(
             flow, cfg, d_pad, queue_capacity, join_buffer_capacity
         )
         if max_cells is not None and cells > max_cells:
+            # Anchor on the first sink: merged (multi-sink) flows are legal
+            # here, and the whole flow — not one op — is over budget.
             out.append(_diag(
-                "queue-over-pool", flow.sink_index,
+                "queue-over-pool", flow.sink_indices()[0],
                 f"flow preallocates {cells} int32 queue cells > budget "
                 f"{max_cells} (Theorem 5.4 bound / slot-pool capacity): it "
                 "could never be admitted",

@@ -127,10 +127,17 @@ class _DScanRT:
         self.label = desc.label()
         self.cursor = jax.device_put(jnp.zeros((eng.p,), jnp.int32), eng.sh(1))
         self.rounds_done = 0
+        self.delta = desc.scan_epoch == "delta"
+        if self.delta and eng.delta_adj is None:
+            raise RuntimeError(
+                "delta-seeded scan on a distributed engine with no applied "
+                "update batch — call DistributedEngine.apply_updates first"
+            )
+        self.rounds = eng.delta_scan_rounds if self.delta else eng.scan_rounds
         self.step = eng._build_scan_step(desc)
 
     def has_input(self) -> bool:
-        return self.rounds_done < self.e.scan_rounds
+        return self.rounds_done < self.rounds
 
     def internal_pending(self) -> bool:
         return self.has_input()
@@ -143,8 +150,12 @@ class _DScanRT:
 
     def run_one(self) -> None:
         e = self.e
+        if self.delta:
+            src, dst, totals = e.delta_src, e.delta_dst, e.delta_scan_totals
+        else:
+            src, dst, totals = e.src, e.dst, e.scan_totals
         buf, n = self.step(
-            e.src, e.dst, e.scan_totals, self.cursor, self.out_q.buf, self.out_q.n
+            src, dst, totals, self.cursor, self.out_q.buf, self.out_q.n
         )
         self.out_q.set(buf, n)
         self.cursor = self.cursor + e.cfg.batch_size
@@ -160,6 +171,12 @@ class _DExtendRT:
         self.e, self.desc, self.in_q, self.out_q = eng, desc, in_q, out_q
         self.label = desc.label()
         self.is_verify = desc.kind == "verify"
+        self.delta = "old" in desc.ext_epochs
+        if self.delta and eng.delta_adj is None:
+            raise RuntimeError(
+                "old-epoch extend/verify on a distributed engine with no "
+                "applied update batch — call apply_updates first"
+            )
         self.step = eng._build_extend_step(desc, self.is_verify)
         # The steal all_to_all is statically elided when a batch's worst-case
         # output can't be split P ways (mirrors the out_w >= p trace guard).
@@ -184,9 +201,15 @@ class _DExtendRT:
 
     def run_one(self) -> None:
         e = self.e
-        rem, buf, n, comm = self.step(
-            e.adj, self.in_q.buf, self.in_q.n, self.out_q.buf, self.out_q.n
-        )
+        if self.delta:
+            rem, buf, n, comm = self.step(
+                e.delta_adj, e.adj, self.in_q.buf, self.in_q.n,
+                self.out_q.buf, self.out_q.n,
+            )
+        else:
+            rem, buf, n, comm = self.step(
+                e.adj, self.in_q.buf, self.in_q.n, self.out_q.buf, self.out_q.n
+            )
         self.in_q.set_n(rem)
         self.out_q.set(buf, n)
         fetched, stolen = (int(x) for x in np.asarray(jnp.sum(comm, axis=0)))
@@ -348,16 +371,20 @@ class DistributedEngine:
         self.mesh = mesh
         self.axis = self.cfg.axis
         self.p = mesh.shape[self.axis]
-        self.pg = partition_graph(graph, self.p)
-        self.graph = graph
-        self.v = graph.num_vertices
-        self.d_pad = self.pg.d_pad
         self.sh = lambda ndim: NamedSharding(mesh, P(self.axis, *([None] * (ndim - 1))))
-        self.adj = jax.device_put(self.pg.adj, self.sh(3))
-        # per-shard directed edge lists, padded to the max shard size
+        self._load_graph(graph)
+        # Delta state (streaming): armed by apply_updates.
+        self.delta_adj: Optional[jax.Array] = None
+        self.delta_src = self.delta_dst = self.delta_scan_totals = None
+        self.delta_scan_rounds = 0
+        self.stats: Dict[str, object] = {}
+
+    def _sharded_edge_lists(self, graph: Graph):
+        """Per-shard directed edge lists padded to the max shard size — the
+        scan source layout, shared by the full graph and the delta graph."""
         offsets = np.asarray(graph.offsets)
         deg_np = np.diff(offsets)
-        src_all = np.repeat(np.arange(self.v, dtype=np.int32), deg_np)
+        src_all = np.repeat(np.arange(graph.num_vertices, dtype=np.int32), deg_np)
         dst_all = np.asarray(graph.nbrs, dtype=np.int32)
         owners = src_all % self.p
         b = self.cfg.batch_size
@@ -372,11 +399,52 @@ class DistributedEngine:
             src[p, :n] = src_all[sel]
             dst[p, :n] = dst_all[sel]
             totals[p] = n
-        self.src = jax.device_put(jnp.asarray(src), self.sh(2))
-        self.dst = jax.device_put(jnp.asarray(dst), self.sh(2))
-        self.scan_totals = jax.device_put(jnp.asarray(totals), self.sh(1))
-        self.scan_rounds = max_e // b
-        self.stats: Dict[str, object] = {}
+        return (
+            jax.device_put(jnp.asarray(src), self.sh(2)),
+            jax.device_put(jnp.asarray(dst), self.sh(2)),
+            jax.device_put(jnp.asarray(totals), self.sh(1)),
+            max_e // b,
+        )
+
+    def _load_graph(self, graph: Graph) -> None:
+        """(Re)partition and bind every graph-derived device array."""
+        self.pg = partition_graph(graph, self.p)
+        self.graph = graph
+        self.v = graph.num_vertices
+        self.d_pad = self.pg.d_pad
+        self.adj = jax.device_put(self.pg.adj, self.sh(3))
+        self.src, self.dst, self.scan_totals, self.scan_rounds = (
+            self._sharded_edge_lists(graph)
+        )
+
+    # -- streaming updates (DESIGN.md §Delta-plans) ----------------------------
+
+    def apply_updates(self, batch):
+        """Apply an edge-insert batch on the distributed engine.
+
+        The storage rebuild itself is row-local (graph/storage.apply_updates);
+        the shard partition is then re-derived — vertex ownership is ``v % P``
+        so ownership never moves, only the owners' padded rows change. The
+        delta graph is kept two ways: its directed edges sharded by owner
+        exactly like normal scan sources (delta scans are sharded scans), and
+        its padded adjacency **replicated** on every shard for the old-epoch
+        membership veto — delta batches are small, so replication is cheaper
+        than a second fetch round per extend."""
+        from repro.graph.storage import apply_updates as storage_apply_updates
+
+        applied = storage_apply_updates(self.graph, batch)
+        self._load_graph(applied.graph)
+        delta = applied.delta
+        self.delta_adj = jax.device_put(
+            delta.padded.adj, NamedSharding(self.mesh, P())
+        )
+        (
+            self.delta_src,
+            self.delta_dst,
+            self.delta_scan_totals,
+            self.delta_scan_rounds,
+        ) = self._sharded_edge_lists(delta)
+        return applied
 
     # ------------------------------------------------------------------
     # shard-local pieces (inside shard_map; no leading P dim)
@@ -499,9 +567,23 @@ class DistributedEngine:
         rebalance = self.cfg.rebalance
         fused, force_kernel = self.cfg.fused, self.cfg.force_kernel
         p = self.p
+        # Old-epoch ops veto delta membership against the *replicated* delta
+        # adjacency (spec P() below); the fused kernels know nothing of
+        # epochs, so epoch-carrying ops always take the plain intersect path.
+        old_mask = tuple(ep == "old" for ep in op.ext_epochs) or (False,) * len(ext)
+        has_old = any(old_mask)
+        if has_old:
+            fused = False
 
-        def f(adj3, in_buf, in_n, out_buf, out_n):
+        def f(delta_adj, adj3, in_buf, in_n, out_buf, out_n):
             adj = adj3[0]
+
+            def delta_rows(vids):
+                safe = jnp.clip(vids, 0, delta_adj.shape[0] - 1)
+                r = jnp.take(delta_adj, safe, axis=0)
+                ok = (vids >= 0) & (vids != INVALID)
+                return jnp.where(ok[:, None], r, INVALID)
+
             rows, take, rem = ops_mod.queue_pop(in_buf[0], in_n[0], b)
             valid = jnp.arange(b) < take
             tv, tr, remote = self._fetch(adj, rows, valid, ext)
@@ -520,9 +602,13 @@ class DistributedEngine:
             elif is_verify:
                 target = rows[:, vpos : vpos + 1]
                 mask = valid
-                for d in ext:
+                for d, is_old in zip(ext, old_mask):
                     other = self._lookup(tv, tr, adj, rows[:, d])
                     mask = mask & ops_mod.row_membership(other, target)[:, 0]
+                    if is_old:
+                        mask = mask & ~ops_mod.row_membership(
+                            delta_rows(rows[:, d]), target
+                        )[:, 0]
                 new_rows, m = ops_mod.compact(rows, mask, b)
                 out_w = b
             else:
@@ -538,9 +624,17 @@ class DistributedEngine:
                 else:
                     cands = self._lookup(tv, tr, adj, rows[:, ext[0]])
                     mask = (cands != INVALID) & valid[:, None]
-                    for d in ext[1:]:
+                    if old_mask[0]:
+                        mask = mask & ~ops_mod.row_membership(
+                            delta_rows(rows[:, ext[0]]), cands
+                        )
+                    for d, is_old in zip(ext[1:], old_mask[1:]):
                         other = self._lookup(tv, tr, adj, rows[:, d])
                         mask = mask & ops_mod.row_membership(other, cands)
+                        if is_old:
+                            mask = mask & ~ops_mod.row_membership(
+                                delta_rows(rows[:, d]), cands
+                            )
                     for col in range(k):
                         mask = mask & (cands != rows[:, col : col + 1])
                     for pp in lt:
@@ -567,7 +661,27 @@ class DistributedEngine:
             comm = jnp.stack([remote, stolen])[None]  # [1, 2]
             return rem[None], buf[None], n2[None], comm
 
-        return self._shardmap(f, 5, 4)
+        ax = self.axis
+        if has_old:
+            # Replicated delta adjacency: spec P() — every shard reads the
+            # whole (small) delta table for its old-epoch membership vetoes.
+            return jax.jit(
+                shard_map(
+                    f,
+                    mesh=self.mesh,
+                    in_specs=(P(),) + tuple(P(ax) for _ in range(5)),
+                    out_specs=tuple(P(ax) for _ in range(4)),
+                    check_rep=False,
+                )
+            )
+
+        def g(adj3, in_buf, in_n, out_buf, out_n):
+            return f(
+                jnp.full((1, 1), INVALID, jnp.int32), adj3, in_buf, in_n,
+                out_buf, out_n,
+            )
+
+        return self._shardmap(g, 5, 4)
 
     def _build_shuffle_step(self, key_col: int):
         """Pop a batch from an input queue, hash-route each row to shard
@@ -693,8 +807,15 @@ class DistributedEngine:
         ``(count, stats)``; stats always reports ``engine="shard_map"`` — every
         operator, PUSH-JOIN included, ran with real collectives."""
         flow = self._to_flow(query_or_plan, space)
+        sinks = flow.sink_indices()
+        if len(sinks) != 1:
+            raise ValueError(
+                f"run() got a flow with {len(sinks)} sinks — merged multi-sink "
+                "flows carry one result per source flow; use run_concurrent "
+                "(per-tenant counts) or run_delta (delta unions) instead"
+            )
         runtimes, st = self._execute(flow)
-        sink = runtimes[flow.sink_index]
+        sink = runtimes[sinks[0]]
         assert isinstance(sink, _DSinkRT)
         return sink.count, self.stats
 
@@ -720,6 +841,48 @@ class DistributedEngine:
         self.stats["tenants"] = len(flows)
         self.stats["per_tenant_matches"] = list(counts)
         return counts, self.stats
+
+    def run_delta(
+        self,
+        query_or_plan: QueryGraph | ExecutionPlan,
+        space: str = "huge",
+    ) -> Tuple[int, Dict]:
+        """Count only the matches created by the last applied batch, SPMD.
+
+        The delta-join decomposition (dataflow.delta_flows) is merged into one
+        multi-sink DAG — delta scans are sharded by edge owner exactly like
+        normal scans, old-epoch extends veto against the replicated delta
+        adjacency — and executed by the same scheduler pass as run(). Returns
+        the summed delta count (the union of the k flows is disjoint by the
+        exactly-once rule) plus the usual traffic stats."""
+        if self.delta_adj is None:
+            raise RuntimeError(
+                "run_delta before apply_updates: no delta batch is armed"
+            )
+        if isinstance(query_or_plan, QueryGraph):
+            plan = optimal_plan(
+                query_or_plan, GraphStats.from_graph(self.graph), self.p, space
+            )
+        elif isinstance(query_or_plan, ExecutionPlan):
+            plan = query_or_plan
+        else:
+            raise TypeError(
+                "run_delta needs a QueryGraph or ExecutionPlan (delta flows "
+                "are derived from the query, not from an existing Dataflow)"
+            )
+        from repro.core.dataflow import delta_flows
+
+        flows = delta_flows(plan)
+        merged, tenant_of_op = merge_flows(flows)
+        verify_flow(merged)
+        runtimes, st = self._execute(merged, tenant_of_op)
+        count = 0
+        for i in merged.sink_indices():
+            sink = runtimes[i]
+            assert isinstance(sink, _DSinkRT)
+            count += sink.count
+        self.stats["delta_flows"] = len(flows)
+        return count, self.stats
 
     def _to_flow(
         self, query_or_plan: QueryGraph | ExecutionPlan | Dataflow, space: str

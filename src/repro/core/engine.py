@@ -32,12 +32,24 @@ import numpy as np
 from repro.core import cache as lrbu
 from repro.core import operators as ops_mod
 from repro.core.cost import GraphStats
-from repro.core.dataflow import Dataflow, OpDesc, translate
+from repro.core.dataflow import (
+    Dataflow,
+    OpDesc,
+    delta_flows,
+    merge_flows,
+    translate,
+)
 from repro.core.optimizer import optimal_plan
 from repro.core.plan import ExecutionPlan
 from repro.core.query import QueryGraph
 from repro.core.scheduler import AdaptiveScheduler, ScheduleStats
-from repro.graph.storage import Graph, INVALID
+from repro.graph.storage import (
+    AppliedUpdates,
+    Graph,
+    GraphUpdateBatch,
+    INVALID,
+    apply_updates as storage_apply_updates,
+)
 
 
 # ---------------------------------------------------------------------------
@@ -203,7 +215,16 @@ class _ScanRT(_BaseRT):
     def __init__(self, engine, desc, out_q):
         super().__init__(engine, desc, out_q)
         self.cursor = 0
-        self.total = int(engine.graph.num_directed_edges)
+        self.delta = desc.scan_epoch == "delta"
+        if self.delta:
+            if engine.delta_adj is None:
+                raise RuntimeError(
+                    "delta-seeded scan on an engine with no applied update "
+                    "batch — call HugeEngine.apply_updates first"
+                )
+            self.total = int(engine.delta_total)
+        else:
+            self.total = int(engine.graph.num_directed_edges)
 
     def has_input(self) -> bool:
         return self.cursor < self.total
@@ -214,8 +235,10 @@ class _ScanRT(_BaseRT):
     def run_one(self) -> None:
         e = self.e
         t0 = time.perf_counter()
+        src = e.delta_src_pad if self.delta else e.src_pad
+        dst = e.delta_dst_pad if self.delta else e.dst_pad
         rows, n = ops_mod.scan_batch(
-            e.src_pad, e.dst_pad, jnp.int32(self.cursor), jnp.int32(self.total),
+            src, dst, jnp.int32(self.cursor), jnp.int32(self.total),
             e.cfg.batch_size, self.desc.lt_positions, self.desc.gt_positions,
         )
         self.cursor += e.cfg.batch_size
@@ -245,7 +268,17 @@ class _ExtendRT(_BaseRT):
         elif self.comm == "push":
             e.push_wco_stage(rows, n, len(self.desc.ext), rows.shape[1])
         t0 = time.perf_counter()
-        if e.cfg.fused:
+        if "old" in self.desc.ext_epochs:
+            # Old-epoch positions veto delta membership; the fused kernels
+            # know nothing of epochs, so delta extends take the plain path
+            # (delta batches are small — this is not the hot loop).
+            out, m = ops_mod.delta_extend_batch(
+                e.adj, e.delta_adj, rows, n, self.desc.ext,
+                tuple(ep == "old" for ep in self.desc.ext_epochs),
+                self.desc.lt_positions, self.desc.gt_positions,
+                e.cfg.batch_size * e.d_pad,
+            )
+        elif e.cfg.fused:
             tab0, tab1, idx, sel, ok = e._fused_tables(rows, self.desc.ext)
             out, m = ops_mod.fused_extend_batch(
                 tab0, tab1, idx, sel, ok, rows, n,
@@ -282,7 +315,13 @@ class _VerifyRT(_BaseRT):
         if self.comm == "pull":
             e.fetch_stage(rows, n, self.desc.ext)
         t0 = time.perf_counter()
-        if e.cfg.fused:
+        if "old" in self.desc.ext_epochs:
+            out, m = ops_mod.delta_verify_batch(
+                e.adj, e.delta_adj, rows, n, self.desc.ext,
+                tuple(ep == "old" for ep in self.desc.ext_epochs),
+                self.desc.verify_pos, e.cfg.batch_size,
+            )
+        elif e.cfg.fused:
             tab0, tab1, idx, sel, ok = e._fused_tables(rows, self.desc.ext)
             out, m = ops_mod.fused_verify_batch(
                 tab0, tab1, idx, sel, ok, rows, n, self.desc.verify_pos,
@@ -614,14 +653,24 @@ class EngineSession:
     def result(self) -> EnumerationResult:
         self.stats.peak_queue_rows = self.sched_stats.peak_queue_rows
         self.stats.peak_queue_bytes = self.sched_stats.peak_queue_bytes
-        sink_rt = self.runtimes[self.flow.sink_index]
+        # All sinks, not ops[-1]: a merged flow (merge_flows — multi-tenant
+        # service, delta unions) has one sink per source flow, and each sink's
+        # schema may order the query vertices differently. Materialised rows
+        # are permuted into ascending query-vertex column order before
+        # concatenation so the result is one coherent [n, |V_q|] table.
         matches = None
-        if (
-            self.engine.cfg.materialize
-            and isinstance(sink_rt, _SinkRT)
-            and sink_rt.rows_out
-        ):
-            matches = np.concatenate(sink_rt.rows_out, axis=0)
+        if self.engine.cfg.materialize:
+            chunks: List[np.ndarray] = []
+            for si in self.flow.sink_indices():
+                sink_rt = self.runtimes[si]
+                if not (isinstance(sink_rt, _SinkRT) and sink_rt.rows_out):
+                    continue
+                rows = np.concatenate(sink_rt.rows_out, axis=0)
+                schema = self.flow.ops[si].schema
+                perm = [schema.index(v) for v in sorted(schema)]
+                chunks.append(rows[:, perm])
+            if chunks:
+                matches = np.concatenate(chunks, axis=0)
         return EnumerationResult(
             count=self.stats.count, stats=self.stats,
             schedule=self.sched_stats, matches=matches,
@@ -632,28 +681,48 @@ class EngineSession:
 # Engine
 # ---------------------------------------------------------------------------
 
+def _edge_scan_arrays(graph: Graph, batch: int) -> Tuple[jax.Array, jax.Array]:
+    """Directed edge arrays padded to a batch multiple (scan_batch's contract)."""
+    offsets = np.asarray(graph.offsets)
+    deg_np = np.diff(offsets)
+    src = np.repeat(np.arange(graph.num_vertices, dtype=np.int32), deg_np)
+    dst = np.asarray(graph.nbrs, dtype=np.int32)
+    pad = (-len(src)) % batch + batch
+    return (
+        jnp.asarray(np.concatenate([src, np.full(pad, 0, np.int32)])),
+        jnp.asarray(np.concatenate([dst, np.full(pad, INVALID, np.int32)])),
+    )
+
+
 class HugeEngine:
     def __init__(self, graph: Graph, cfg: EngineConfig | None = None, track_balance: bool = False):
-        self.graph = graph
         self.cfg = cfg or EngineConfig()
+        self._load_graph(graph)
+        self.stats = EngineStats()
+        self.track_balance = track_balance
+        self.balance_rows = np.zeros(self.cfg.num_machines, dtype=np.int64)
+        self._reset_caches()
+        # Delta state (streaming): installed by apply_updates.
+        self.delta_adj: Optional[jax.Array] = None
+        self.delta_src_pad: Optional[jax.Array] = None
+        self.delta_dst_pad: Optional[jax.Array] = None
+        self.delta_total: int = 0
+
+    def _load_graph(self, graph: Graph) -> None:
+        """(Re)bind every graph-derived array — also the update path's spine."""
+        self.graph = graph
         self.adj = graph.padded.adj
         self.deg = graph.padded.deg
         self.d_pad = graph.padded.d_pad
         assert graph.num_vertices * self.cfg.num_machines < 2**31, (
             "machine-id × vertex-id key must fit int32"
         )
-        # Scan source: directed edge arrays padded to a batch multiple.
-        offsets = np.asarray(graph.offsets)
-        deg_np = np.diff(offsets)
-        src = np.repeat(np.arange(graph.num_vertices, dtype=np.int32), deg_np)
-        dst = np.asarray(graph.nbrs, dtype=np.int32)
-        b = self.cfg.batch_size
-        pad = (-len(src)) % b + b
-        self.src_pad = jnp.asarray(np.concatenate([src, np.full(pad, 0, np.int32)]))
-        self.dst_pad = jnp.asarray(np.concatenate([dst, np.full(pad, INVALID, np.int32)]))
-        self.stats = EngineStats()
-        self.track_balance = track_balance
-        self.balance_rows = np.zeros(self.cfg.num_machines, dtype=np.int64)
+        self.src_pad, self.dst_pad = _edge_scan_arrays(graph, self.cfg.batch_size)
+
+    def _reset_caches(self) -> None:
+        """Build (or rebuild) the fetch caches from scratch. Called at init
+        and after every apply_updates — cached adjacency slabs and hit/miss
+        bookkeeping are stale the moment the graph mutates."""
         self._cache = None
         if self.cfg.cache_capacity > 0:
             ways = 1 if self.cfg.cache_policy == "direct" else self.cfg.cache_ways
@@ -668,6 +737,63 @@ class HugeEngine:
             self._vcache = lrbu.make_cache(
                 self.cfg.cache_capacity, ways=self.cfg.cache_ways, d_pad=self.d_pad
             )
+
+    # -- streaming updates (DESIGN.md §Delta-plans) ----------------------------
+
+    def apply_updates(self, batch: GraphUpdateBatch) -> AppliedUpdates:
+        """Apply an edge-insert batch and arm the delta execution state.
+
+        Row-local storage rebuild (graph/storage.apply_updates), then every
+        graph-derived array is rebound and both fetch caches are dropped —
+        a cached slab from the pre-batch graph would silently corrupt Eq.-2
+        intersections. The delta graph (genuinely-new edges only) becomes the
+        seed for delta-seeded scans and the old-epoch membership veto."""
+        applied = storage_apply_updates(self.graph, batch)
+        self._load_graph(applied.graph)
+        self._reset_caches()
+        delta = applied.delta
+        self.delta_adj = delta.padded.adj
+        self.delta_src_pad, self.delta_dst_pad = _edge_scan_arrays(
+            delta, self.cfg.batch_size
+        )
+        self.delta_total = int(delta.num_directed_edges)
+        return applied
+
+    def run_delta(
+        self,
+        query_or_plan: QueryGraph | ExecutionPlan,
+        space: str = "huge",
+        stats: GraphStats | None = None,
+    ) -> EnumerationResult:
+        """Enumerate only the matches *created* by the last applied batch.
+
+        Executes the delta-join decomposition (dataflow.delta_flows): one
+        delta-seeded flow per query edge, merged into a single multi-sink DAG
+        so one scheduler pass interleaves all k flows through the standard
+        EngineSession/AdaptiveScheduler machinery. Exactly-once: a new match
+        is produced by the flow of its minimum-index delta query edge."""
+        if self.delta_adj is None:
+            raise RuntimeError(
+                "run_delta before apply_updates: no delta batch is armed"
+            )
+        if isinstance(query_or_plan, QueryGraph):
+            gstats = stats or GraphStats.from_graph(self.graph)
+            plan = optimal_plan(query_or_plan, gstats, self.cfg.num_machines, space)
+        elif isinstance(query_or_plan, ExecutionPlan):
+            plan = query_or_plan
+        else:
+            raise TypeError(
+                "run_delta needs a QueryGraph or ExecutionPlan (delta flows "
+                "are derived from the query, not from an existing Dataflow)"
+            )
+        t_start = time.perf_counter()
+        flows = delta_flows(plan)
+        merged, _ = merge_flows(flows)
+        session = self.prepare(merged)
+        session.run()
+        result = session.result()
+        result.stats.wall_time = time.perf_counter() - t_start
+        return result
 
     # -- fetch stage (pull accounting) ---------------------------------------
 

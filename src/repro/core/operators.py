@@ -236,6 +236,101 @@ def verify_batch(
 
 
 # ---------------------------------------------------------------------------
+# Delta epochs (DESIGN.md §Delta-plans). For insert-only batches the old
+# adjacency is reconstructed as membership-in-new AND NOT membership-in-delta,
+# so no pre-batch snapshot is kept; ``old`` is a static bool per intersected
+# position. Candidate gathers always read the *new* padded adjacency — an
+# old-epoch position only adds a delta-membership veto, keeping the Eq.-2
+# structure (and its cost bound) intact.
+# ---------------------------------------------------------------------------
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("ext", "old", "lt", "gt", "out_cap"),
+)
+def delta_extend_batch(
+    adj: jax.Array,        # int32[V, D]  post-batch padded sorted adjacency
+    delta_adj: jax.Array,  # int32[V, Dd] padded sorted adjacency of new edges
+    rows: jax.Array,       # int32[B, K]
+    n: jax.Array,
+    ext: Tuple[int, ...],
+    old: Tuple[bool, ...],  # aligned with ext; True → old-epoch edge
+    lt: Tuple[int, ...],
+    gt: Tuple[int, ...],
+    out_cap: int,
+):
+    b, k = rows.shape
+    v = adj.shape[0]
+    valid_row = jnp.arange(b) < n
+
+    def nbr_rows(table, col):
+        vids = rows[:, col]
+        safe = jnp.clip(vids, 0, v - 1)
+        r = jnp.take(table, safe, axis=0)
+        ok = (vids >= 0) & (vids < v)
+        return jnp.where(ok[:, None], r, INVALID)
+
+    cands = nbr_rows(adj, ext[0])  # [B, D]
+    mask = (cands != INVALID) & valid_row[:, None]
+    if old[0]:
+        mask = mask & ~row_membership(nbr_rows(delta_adj, ext[0]), cands)
+    for d, is_old in zip(ext[1:], old[1:]):
+        mask = mask & row_membership(nbr_rows(adj, d), cands)
+        if is_old:
+            mask = mask & ~row_membership(nbr_rows(delta_adj, d), cands)
+    for col in range(k):
+        mask = mask & (cands != rows[:, col : col + 1])
+    for p in lt:
+        mask = mask & (cands < jnp.where(valid_row, rows[:, p], -1)[:, None])
+    for p in gt:
+        mask = mask & (cands > jnp.where(valid_row, rows[:, p], INVALID)[:, None])
+
+    d = cands.shape[1]
+    expanded = jnp.concatenate(
+        [
+            jnp.broadcast_to(rows[:, None, :], (b, d, k)),
+            cands[:, :, None],
+        ],
+        axis=2,
+    ).reshape(b * d, k + 1)
+    return compact(expanded, mask.reshape(b * d), out_cap)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("ext", "old", "verify_pos", "out_cap")
+)
+def delta_verify_batch(
+    adj: jax.Array,
+    delta_adj: jax.Array,
+    rows: jax.Array,
+    n: jax.Array,
+    ext: Tuple[int, ...],
+    old: Tuple[bool, ...],
+    verify_pos: int,
+    out_cap: int,
+):
+    """Epoch-aware VERIFY: f(root) ∈ ∩ N_ep(f(ext)) with per-position epochs."""
+    b, k = rows.shape
+    v = adj.shape[0]
+    valid_row = jnp.arange(b) < n
+    target = rows[:, verify_pos : verify_pos + 1]  # [B, 1]
+    mask = valid_row
+
+    def nbr_rows(table, col):
+        vids = rows[:, col]
+        safe = jnp.clip(vids, 0, v - 1)
+        r = jnp.take(table, safe, axis=0)
+        ok = (vids >= 0) & (vids < v)
+        return jnp.where(ok[:, None], r, INVALID)
+
+    for d, is_old in zip(ext, old):
+        mask = mask & row_membership(nbr_rows(adj, d), target)[:, 0]
+        if is_old:
+            mask = mask & ~row_membership(nbr_rows(delta_adj, d), target)[:, 0]
+    return compact(rows, mask, out_cap)
+
+
+# ---------------------------------------------------------------------------
 # Fused hot path (DESIGN.md §Fused-hot-path): the cache-probe / fetch-table
 # addressing is computed by the engines as a tiny [B, E] prologue; slab
 # movement, Eq.-2 intersection, injectivity and symmetry-order filters run in

@@ -8,8 +8,11 @@ partitioning (Section 2 of the paper): vertex ``v`` lives on shard
 """
 from repro.graph.storage import (
     INVALID,
+    AppliedUpdates,
     Graph,
+    GraphUpdateBatch,
     PaddedAdjacency,
+    apply_updates,
     build_graph,
     from_edge_list,
 )
@@ -23,8 +26,11 @@ from repro.graph.generators import (
 
 __all__ = [
     "INVALID",
+    "AppliedUpdates",
     "Graph",
+    "GraphUpdateBatch",
     "PaddedAdjacency",
+    "apply_updates",
     "build_graph",
     "from_edge_list",
     "PartitionedGraph",

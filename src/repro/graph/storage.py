@@ -43,6 +43,18 @@ class PaddedAdjacency:
     adj: jax.Array  # int32[V, D_pad]
     deg: jax.Array  # int32[V]
 
+    def __post_init__(self):
+        # The Pallas fused kernels tile adjacency rows directly, so D_pad must
+        # be a lane multiple — enforced here so a hand-built adjacency can't
+        # silently violate what build_graph guarantees.
+        if hasattr(self.adj, "ndim") and self.adj.ndim == 2:
+            d_pad = self.adj.shape[1]
+            if d_pad % _LANE != 0:
+                raise ValueError(
+                    f"PaddedAdjacency d_pad={d_pad} is not a multiple of the "
+                    f"{_LANE}-lane tile (build_graph rounds up; do the same)"
+                )
+
     @property
     def num_vertices(self) -> int:
         return self.adj.shape[0]
@@ -105,11 +117,24 @@ class Graph:
         return self.padded.neighbors(vids)
 
     def has_edge(self, u: jax.Array, v: jax.Array) -> jax.Array:
-        """Vectorised edge test via searchsorted on sorted padded rows."""
+        """Vectorised edge test via searchsorted on sorted padded rows.
+
+        Broadcast-safe over scalar, 1-D, and batched inputs: ``vmap`` requires
+        rank ≥ 1, so the padded rows and targets are flattened to one batch
+        axis, searched, and reshaped back to the broadcast shape of ``u``/``v``.
+        """
+        u = jnp.asarray(u, jnp.int32)
+        v = jnp.asarray(v, jnp.int32)
         rows, _ = self.padded.neighbors(u)
-        idx = jax.vmap(jnp.searchsorted)(rows, v)
-        idx = jnp.clip(idx, 0, rows.shape[-1] - 1)
-        return jnp.take_along_axis(rows, idx[..., None], axis=-1)[..., 0] == v
+        batch_shape = jnp.broadcast_shapes(u.shape, v.shape)
+        rows = jnp.broadcast_to(rows, batch_shape + rows.shape[-1:])
+        vb = jnp.broadcast_to(v, batch_shape)
+        flat_rows = rows.reshape(-1, rows.shape[-1])
+        flat_v = vb.reshape(-1)
+        idx = jax.vmap(jnp.searchsorted)(flat_rows, flat_v)
+        idx = jnp.clip(idx, 0, flat_rows.shape[-1] - 1)
+        found = jnp.take_along_axis(flat_rows, idx[:, None], axis=-1)[:, 0]
+        return (found == flat_v).reshape(batch_shape)
 
     def size_bytes(self) -> int:
         return int(
@@ -150,6 +175,11 @@ def build_graph(edges: np.ndarray, num_vertices: int, d_pad: int | None = None) 
     max_deg = int(deg.max()) if deg.size else 0
     if d_pad is None:
         d_pad = max(_LANE, _round_up(max(1, max_deg), _LANE))
+    else:
+        # An explicit d_pad must still satisfy the module invariant (lane-
+        # multiple rows: the Pallas kernels tile on it) — round up rather than
+        # letting e.g. d_pad=3 pass validation and break kernels downstream.
+        d_pad = max(_LANE, _round_up(int(d_pad), _LANE))
     if max_deg > d_pad:
         raise ValueError(f"d_pad={d_pad} smaller than max degree {max_deg}")
 
@@ -163,6 +193,153 @@ def build_graph(edges: np.ndarray, num_vertices: int, d_pad: int | None = None) 
         offsets=jnp.asarray(offsets),
         nbrs=jnp.asarray(nbrs),
         padded=PaddedAdjacency(adj=jnp.asarray(adj), deg=jnp.asarray(deg)),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Streaming updates (delta-plan substrate; DESIGN.md §Delta-plans)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class GraphUpdateBatch:
+    """A batch of graph mutations. Only edge inserts for now; ``kind`` keeps
+    the wire format ready for deletes (delta flows would then also subtract
+    matches, which needs old-epoch *adjacency* rather than the new-minus-delta
+    reconstruction inserts allow)."""
+
+    edges: np.ndarray  # int[E, 2] undirected; self loops / dups tolerated
+    kind: str = "insert"
+
+    def __post_init__(self):
+        if self.kind != "insert":
+            raise NotImplementedError(
+                f"GraphUpdateBatch kind={self.kind!r}: only 'insert' is "
+                "supported (deletes need old-epoch adjacency snapshots)"
+            )
+
+    @property
+    def num_edges(self) -> int:
+        return int(np.asarray(self.edges).reshape(-1, 2).shape[0])
+
+
+@dataclasses.dataclass(frozen=True)
+class AppliedUpdates:
+    """Result of :func:`apply_updates`.
+
+    ``graph`` is the post-batch graph G_new; ``delta`` is a :class:`Graph`
+    over the *genuinely new* edges only (already-present edges and dups are
+    dropped), which serves both as the delta scan source and as the
+    old-epoch membership filter: for pure inserts,
+    ``N_old(v) = N_new(v) \\ N_delta(v)``."""
+
+    graph: Graph
+    delta: Graph
+    edges: np.ndarray       # int32[E_new, 2] canonical genuinely-new edges
+    touched: np.ndarray     # int32[T] vertex ids whose adjacency rows changed
+
+    @property
+    def num_new_edges(self) -> int:
+        return int(self.edges.shape[0])
+
+
+def _canonical_new_edges(graph: Graph, batch: GraphUpdateBatch) -> np.ndarray:
+    """Canonicalise a batch against the current graph: drop self loops,
+    duplicates, out-of-range endpoints (an error), and edges already present."""
+    edges = np.asarray(batch.edges, dtype=np.int64).reshape(-1, 2)
+    if edges.size == 0:
+        return np.zeros((0, 2), np.int64)
+    v = graph.num_vertices
+    if edges.min() < 0 or edges.max() >= v:
+        raise ValueError(
+            f"update batch references vertices outside [0, {v}) "
+            "(vertex inserts are not supported; grow the graph by rebuild)"
+        )
+    edges = edges[edges[:, 0] != edges[:, 1]]
+    lo = np.minimum(edges[:, 0], edges[:, 1])
+    hi = np.maximum(edges[:, 0], edges[:, 1])
+    und = np.unique(np.stack([lo, hi], axis=1), axis=0)
+    if und.size == 0:
+        return und.reshape(0, 2)
+    # Drop edges already in the graph (host CSR membership per row).
+    offsets = np.asarray(graph.offsets)
+    nbrs = np.asarray(graph.nbrs)
+    starts = offsets[und[:, 0]]
+    ends = offsets[und[:, 0] + 1]
+    present = np.zeros(und.shape[0], bool)
+    for i, (a, b) in enumerate(und):
+        row = nbrs[starts[i] : ends[i]]
+        j = np.searchsorted(row, b)
+        present[i] = j < row.shape[0] and row[j] == b
+    return und[~present]
+
+
+def apply_updates(graph: Graph, batch: GraphUpdateBatch) -> AppliedUpdates:
+    """Apply an edge-insert batch, rebuilding only the affected rows.
+
+    CSR: the new directed neighbours are spliced into ``nbrs`` with one
+    vectorised ``np.insert`` (positions computed by per-row searchsorted) and
+    offsets re-accumulated. Padded adjacency: only the touched rows are
+    re-padded and scattered into a copy; when a touched row overflows
+    ``d_pad``, the matrix grows by whole lane multiples (128) so the kernel
+    tiling invariant survives the update."""
+    new_edges = _canonical_new_edges(graph, batch)
+    v = graph.num_vertices
+    delta = build_graph(new_edges, v)
+    if new_edges.shape[0] == 0:
+        return AppliedUpdates(
+            graph=graph, delta=delta,
+            edges=new_edges.astype(np.int32),
+            touched=np.zeros((0,), np.int32),
+        )
+
+    offsets = np.asarray(graph.offsets).astype(np.int64)
+    nbrs = np.asarray(graph.nbrs)
+    deg = np.asarray(graph.padded.deg).copy()
+
+    # Directed view of the inserts, sorted by (row, value) so np.insert keeps
+    # every row sorted even when one row receives several new neighbours.
+    src = np.concatenate([new_edges[:, 0], new_edges[:, 1]])
+    dst = np.concatenate([new_edges[:, 1], new_edges[:, 0]]).astype(np.int32)
+    order = np.lexsort((dst, src))
+    src, dst = src[order], dst[order]
+    # Insert position of each new neighbour inside its row, relative to the
+    # *original* flat nbrs array (np.insert semantics).
+    pos = np.empty(src.shape[0], np.int64)
+    for i in range(src.shape[0]):
+        row = nbrs[offsets[src[i]] : offsets[src[i] + 1]]
+        pos[i] = offsets[src[i]] + np.searchsorted(row, dst[i])
+    new_nbrs = np.insert(nbrs, pos, dst)
+
+    add_cnt = np.bincount(src, minlength=v).astype(np.int32)
+    new_deg = deg + add_cnt
+    new_offsets = np.zeros(v + 1, dtype=np.int32)
+    np.cumsum(new_deg, out=new_offsets[1:])
+
+    # Padded adjacency: grow columns by lane multiples if any row overflowed,
+    # then rebuild only the touched rows from the fresh CSR.
+    touched = np.unique(src).astype(np.int32)
+    adj = np.asarray(graph.padded.adj)
+    max_deg = int(new_deg.max())
+    d_pad = adj.shape[1]
+    if max_deg > d_pad:
+        d_pad = _round_up(max_deg, _LANE)
+        adj = np.pad(adj, ((0, 0), (0, d_pad - adj.shape[1])),
+                     constant_values=INVALID)
+    else:
+        adj = adj.copy()
+    for t in touched:
+        row = new_nbrs[new_offsets[t] : new_offsets[t + 1]]
+        adj[t, : row.shape[0]] = row
+        adj[t, row.shape[0] :] = INVALID
+
+    new_graph = Graph(
+        offsets=jnp.asarray(new_offsets),
+        nbrs=jnp.asarray(new_nbrs.astype(np.int32)),
+        padded=PaddedAdjacency(adj=jnp.asarray(adj), deg=jnp.asarray(new_deg)),
+    )
+    return AppliedUpdates(
+        graph=new_graph, delta=delta,
+        edges=new_edges.astype(np.int32), touched=touched,
     )
 
 

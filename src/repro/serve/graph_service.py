@@ -40,7 +40,8 @@ from typing import Dict, List, Optional, Tuple
 from repro.analysis.diagnostics import Diagnostic, FlowcheckError, errors
 from repro.analysis.flowcheck import check_plan, check_query, verify_flow
 from repro.core.cost import GraphStats
-from repro.core.dataflow import Dataflow
+from repro.core.dataflow import Dataflow, delta_flows, merge_flows
+from repro.core.optimizer import optimal_plan
 from repro.core.plan import ExecutionPlan
 from repro.core.engine import (
     EngineConfig,
@@ -52,7 +53,7 @@ from repro.core.engine import (
 )
 from repro.core.query import PAPER_QUERIES, QueryGraph
 from repro.core.scheduler import AdaptiveScheduler
-from repro.graph.storage import Graph
+from repro.graph.storage import Graph, GraphUpdateBatch
 
 # Request states
 QUEUED = "queued"
@@ -147,6 +148,27 @@ class _Active:
     session: EngineSession
 
 
+@dataclasses.dataclass
+class StandingQuery:
+    """A continuous subgraph query: registered once, answered per batch.
+
+    The delta-join decomposition depends only on the query, so the merged
+    multi-sink delta dataflow is translated and cached at registration;
+    every ``apply_batch`` re-submits it as an ordinary request — standing
+    deltas ride the *same* QueueSlotPool admission and Theorem-5.4 pricing
+    as ad-hoc queries, they are not a privileged side channel. ``history``
+    records one (ticket, count) outcome per applied batch."""
+
+    id: int
+    tenant: str
+    query: QueryGraph
+    plan: ExecutionPlan
+    delta_flow: Dataflow                      # merged k-sink delta DAG
+    match_budget: Optional[int] = None
+    total_count: int = 0
+    history: List[Tuple[QueryTicket, int]] = dataclasses.field(default_factory=list)
+
+
 class GraphService:
     """Subgraph-matching-as-a-service over one shared :class:`HugeEngine`.
 
@@ -178,6 +200,8 @@ class GraphService:
         self.ticks = 0
         self.peak_pool_cells = 0
         self.peak_inflight_rows = 0
+        self.standing: List[StandingQuery] = []
+        self.batches_applied = 0
 
     # -- tenant accounting ---------------------------------------------------
 
@@ -412,6 +436,96 @@ class GraphService:
             "completed": done_total,
             "peak_pool_cells": self.peak_pool_cells,
             "peak_inflight_rows": self.peak_inflight_rows,
+        }
+
+    # -- standing queries over streaming updates (DESIGN.md §Delta-plans) ------
+
+    def register_standing(
+        self,
+        tenant: str,
+        query: QueryGraph | ExecutionPlan | str,
+        space: str = "huge",
+        match_budget: Optional[int] = None,
+    ) -> StandingQuery:
+        """Register a continuous query; per-batch match deltas arrive via
+        ``apply_batch``. The plan (and thus the delta decomposition) is fixed
+        at registration time against the current graph statistics."""
+        if isinstance(query, str):
+            if query not in PAPER_QUERIES:
+                raise KeyError(f"unknown query name: {query!r}")
+            query = PAPER_QUERIES[query]
+        if isinstance(query, QueryGraph):
+            bad = errors(check_query(query))
+            if bad:
+                raise FlowcheckError(bad)
+            plan = optimal_plan(
+                query, self.gstats, self.engine.cfg.num_machines, space
+            )
+        elif isinstance(query, ExecutionPlan):
+            bad = errors(check_plan(query))
+            if bad:
+                raise FlowcheckError(bad)
+            plan = query
+            query = plan.query
+        else:
+            raise TypeError(
+                "standing queries need a QueryGraph/ExecutionPlan/name — the "
+                "delta decomposition is derived from the query, not from a "
+                "pre-translated Dataflow"
+            )
+        merged, _ = merge_flows(delta_flows(plan))
+        verify_flow(
+            merged, cfg=self.engine.cfg, d_pad=self.engine.d_pad,
+            queue_capacity=self.cfg.queue_capacity,
+            join_buffer_capacity=self.cfg.join_buffer_capacity,
+        )
+        sq = StandingQuery(
+            id=next(self._ids), tenant=tenant, query=query, plan=plan,
+            delta_flow=merged, match_budget=match_budget,
+        )
+        self.standing.append(sq)
+        return sq
+
+    def unregister_standing(self, sq: StandingQuery) -> bool:
+        if sq in self.standing:
+            self.standing.remove(sq)
+            return True
+        return False
+
+    def apply_batch(self, batch: GraphUpdateBatch) -> Dict[str, object]:
+        """Apply an edge batch and deliver each standing query's match delta.
+
+        Consistency barrier first: in-flight ad-hoc queries are drained
+        before the graph mutates (their sessions hold pre-batch adjacency
+        state — partial matches extended against a mutated graph would be
+        neither pre- nor post-batch semantics). Then the engine applies the
+        update (row-local rebuild + cache drop), graph statistics are
+        refreshed, and one delta ticket per standing query goes through the
+        ordinary submit→admit→tick lifecycle, so concurrent standing tenants
+        share the pool under the same pricing as ad-hoc traffic."""
+        self.run_until_idle()
+        applied = self.engine.apply_updates(batch)
+        self.gstats = GraphStats.from_graph(self.engine.graph)
+        self.batches_applied += 1
+        tickets: List[Tuple[StandingQuery, QueryTicket]] = []
+        for sq in self.standing:
+            t = self.submit(GraphQueryRequest(
+                tenant=sq.tenant, query=sq.delta_flow,
+                match_budget=sq.match_budget,
+            ))
+            tickets.append((sq, t))
+        self.run_until_idle()
+        deltas: Dict[int, int] = {}
+        for sq, t in tickets:
+            count = t.count if t.status in (DONE, BUDGET_EXCEEDED) else 0
+            sq.total_count += count
+            sq.history.append((t, count))
+            deltas[sq.id] = count
+        return {
+            "new_edges": applied.num_new_edges,
+            "touched_vertices": int(applied.touched.shape[0]),
+            "deltas": deltas,
+            "tickets": [t for _, t in tickets],
         }
 
     def cancel(self, ticket: QueryTicket) -> bool:
