@@ -5,6 +5,7 @@ import functools
 import json
 import os
 import subprocess
+import tempfile
 import time
 from typing import Dict, List, Optional
 
@@ -102,19 +103,47 @@ def record_bench(name: str, entries: List[dict]) -> str:
     helper stamps ``recorded`` (ISO-8601 timestamp), ``git`` (short rev),
     and ``flowcheck_rules`` (clean-tree verifier error count — 0 expected)
     so successive PRs accumulate an *attributable* regression trajectory
-    instead of overwriting it."""
+    instead of overwriting it.
+
+    The write is crash-safe: the merged document goes to a temp file in the
+    same directory and is renamed over the target (``os.replace`` is atomic
+    on POSIX), so a benchmark process killed mid-write — e.g. by the chaos
+    harness — can never leave a truncated JSON behind. If a previous crash
+    *did* corrupt the file (pre-atomic histories), the corrupt bytes are
+    preserved in a ``.corrupt`` sidecar and the trajectory restarts rather
+    than sinking every future bench run."""
     path = os.path.join(REPO_ROOT, f"BENCH_{name}.json")
     doc = {"bench": name, "entries": []}
     if os.path.exists(path):
-        with open(path) as f:
-            doc = json.load(f)
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+            if not isinstance(doc, dict):
+                raise ValueError(f"expected a JSON object, got {type(doc)}")
+        except (json.JSONDecodeError, ValueError, UnicodeDecodeError):
+            sidecar = path + ".corrupt"
+            os.replace(path, sidecar)
+            print(f"record_bench: {path} was corrupt; preserved as {sidecar} "
+                  "and starting a fresh trajectory")
+            doc = {"bench": name, "entries": []}
     stamp = time.strftime("%Y-%m-%dT%H:%M:%S%z")
     doc["updated"] = stamp
     doc.setdefault("entries", []).extend(
         [dict(e, recorded=stamp, git=git_rev(),
               flowcheck_rules=flowcheck_rule_count()) for e in entries]
     )
-    with open(path, "w") as f:
-        json.dump(doc, f, indent=2)
-        f.write("\n")
+    fd, tmp = tempfile.mkstemp(
+        dir=REPO_ROOT, prefix=f".BENCH_{name}.", suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump(doc, f, indent=2)
+            f.write("\n")
+        os.chmod(tmp, 0o644)  # mkstemp defaults to 0600
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
     return path

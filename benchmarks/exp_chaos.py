@@ -1,0 +1,106 @@
+"""Chaos benchmark: recovery overhead of the fault-tolerance ladder.
+
+For each query, a fault-free baseline run is timed against runs that recover
+from an injected fault (queue-overflow → checkpoint restore at a halved
+batch; shard-loss → deterministic replay; kernel-fail → one-shot ref-twin
+fallback). Counts are asserted identical to the baseline before anything is
+recorded, so every point in ``BENCH_chaos.json`` is a *successful* recovery —
+the figure of merit is the wall-time overhead of surviving the fault
+(EXPERIMENTS.md §Chaos).
+
+  PYTHONPATH=src python -m benchmarks.exp_chaos            # default sweep
+  PYTHONPATH=src python -m benchmarks.exp_chaos --smoke    # CI scale
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from benchmarks.common import bench_graph, emit, record_bench
+from repro.core.engine import EngineConfig, HugeEngine
+from repro.core.faults import FaultPlan
+from repro.core.query import PAPER_QUERIES
+
+# (case label, fault kind, extra EngineConfig fields)
+FAULT_CASES = (
+    ("queue-overflow", "queue-overflow", {}),
+    ("shard-loss", "shard-loss", {}),
+    ("kernel-fail", "kernel-fail", {"fused": True}),
+)
+
+
+def _cfg(seed: int, kind: str | None, **extra) -> EngineConfig:
+    faults = None if kind is None else FaultPlan.single(
+        kind, at_step=seed % 3, seed=seed)
+    return EngineConfig(batch_size=256, queue_capacity=1 << 15,
+                        join_buffer_capacity=1 << 17, faults=faults,
+                        recover=True, **extra)
+
+
+def run_case(graph, qname: str, kind: str | None, seed: int, **extra):
+    eng = HugeEngine(graph, _cfg(seed, kind, **extra))
+    t0 = time.perf_counter()
+    res = eng.run(PAPER_QUERIES[qname])
+    wall = time.perf_counter() - t0
+    if kind is not None:
+        fp = eng.cfg.faults
+        assert fp.fired_count(kind) == 1, (
+            f"{qname}/{kind}: fault never fired — not a recovery measurement")
+    return res, wall
+
+
+def main(argv=None) -> list:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--vertices", type=int, default=1 << 11)
+    ap.add_argument("--deg", type=float, default=6.0)
+    ap.add_argument("--queries", nargs="+", default=["q1", "q2", "q3"])
+    ap.add_argument("--seed", type=int, default=0,
+                    help="FaultPlan seed (shifts the trigger step)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI scale: 512-vertex graph, q1 only")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        args.vertices, args.queries = 512, ["q1"]
+
+    graph = bench_graph(args.vertices, args.deg, seed=7)
+    entries = []
+    for qname in args.queries:
+        # Warmup run compiles every operator signature; the timed baseline
+        # then measures steady-state, which is what recovery re-executes.
+        run_case(graph, qname, None, args.seed)
+        base, base_wall = run_case(graph, qname, None, args.seed)
+        emit(f"chaos/{qname}/baseline", base_wall * 1e6, f"{base.count}m")
+        for label, kind, extra in FAULT_CASES:
+            if extra:
+                # warm any extra-path signatures (e.g. fused kernels) so the
+                # overhead measures recovery, not first-run compilation
+                run_case(graph, qname, None, args.seed, **extra)
+            res, wall = run_case(graph, qname, kind, args.seed, **extra)
+            assert res.count == base.count, (
+                f"{qname}/{label}: recovered count {res.count} != "
+                f"baseline {base.count}")
+            overhead = wall / max(base_wall, 1e-9)
+            entries.append({
+                "suite": "exp_chaos", "case": f"{qname}_{label}",
+                "mode": "recovered", "matches": res.count,
+                "wall_s": wall, "baseline_wall_s": base_wall,
+                "overhead_x": overhead, "seed": args.seed,
+                "retries": res.stats.retries,
+                "restarts": res.stats.restarts,
+                "pressure_events": res.stats.pressure_events,
+                "kernel_fallbacks": res.stats.kernel_fallbacks,
+            })
+            emit(f"chaos/{qname}/{label}", wall * 1e6,
+                 f"overhead={overhead:.2f}x")
+            print(f"[chaos] {qname} {label}: recovered {res.count} matches "
+                  f"in {wall:.2f}s vs baseline {base_wall:.2f}s "
+                  f"({overhead:.2f}x)")
+    record_bench("chaos", entries)
+    worst = max(e["overhead_x"] for e in entries)
+    print(f"[chaos] worst recovery overhead: {worst:.2f}x baseline")
+    return entries
+
+
+if __name__ == "__main__":
+    main()

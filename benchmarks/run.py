@@ -27,6 +27,7 @@ from benchmarks import (
     exp7_scheduling,
     exp9_plans,
     exp10_scaling,
+    exp_chaos,
     exp_dist_hybrid,
     exp_service_load,
     exp_streaming,
@@ -43,6 +44,7 @@ SUITES = {
     "exp7": exp7_scheduling,
     "exp9": exp9_plans,
     "exp10": exp10_scaling,
+    "exp_chaos": exp_chaos,
     "exp_dist_hybrid": exp_dist_hybrid,
     "exp_service_load": exp_service_load,
     "exp_streaming": exp_streaming,

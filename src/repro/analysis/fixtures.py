@@ -150,6 +150,7 @@ FIXTURES: Dict[str, Tuple[Callable[[], List[Diagnostic]], Tuple[str, ...]]] = {
                             ("ext-disconnected",)),
     "pull-join": (lambda: check_flow(pull_join_flow()), ("comm-illegal",)),
     "oversized-queues": (lambda: _run_oversized(), ("queue-over-pool",)),
+    "retry-slack": (lambda: _run_retry_slack(), ("retry-slack",)),
     "bad-delta-epoch": (lambda: check_flow(bad_delta_epoch_flow()),
                         ("epoch-illegal", "epoch-no-delta-scan")),
     "disconnected-plan": (lambda: check_plan(disconnected_plan()),
@@ -165,6 +166,21 @@ def _run_oversized() -> List[Diagnostic]:
 
     return check_flow(oversized_queue_flow(), cfg=EngineConfig(), d_pad=64,
                       max_cells=1 << 20)
+
+
+def _run_retry_slack() -> List[Diagnostic]:
+    """A flow that fits its budget at plain pricing but not once the armed
+    fault plan doubles the Lemma-5.2 retry slack: the diagnostic must blame
+    the recovery headroom (rule ``retry-slack``), not the query size."""
+    from repro.core.engine import EngineConfig, flow_queue_cells
+    from repro.core.faults import FaultPlan
+
+    flow = oversized_queue_flow()
+    ft_cfg = EngineConfig(faults=FaultPlan.single("queue-overflow"),
+                          recover=True)
+    plain = flow_queue_cells(flow, ft_cfg, 64, None, None,
+                             fault_tolerant=False)
+    return check_flow(flow, cfg=ft_cfg, d_pad=64, max_cells=plain)
 
 
 def run_fixture(name: str) -> Tuple[List[Diagnostic], Tuple[str, ...]]:

@@ -380,15 +380,35 @@ def check_flow(
             flow, cfg, d_pad, queue_capacity, join_buffer_capacity
         )
         if max_cells is not None and cells > max_cells:
+            # Fault-tolerant configs double the Lemma-5.2 slack so a degraded
+            # retry still fits its queues; when the flow fits the budget at
+            # plain pricing but not with that retry slack, say so — the fix
+            # is a different knob (disable recovery or grow the pool), not
+            # "shrink the query".
+            plain = flow_queue_cells(
+                flow, cfg, d_pad, queue_capacity, join_buffer_capacity,
+                fault_tolerant=False,
+            )
             # Anchor on the first sink: merged (multi-sink) flows are legal
             # here, and the whole flow — not one op — is over budget.
-            out.append(_diag(
-                "queue-over-pool", flow.sink_indices()[0],
-                f"flow preallocates {cells} int32 queue cells > budget "
-                f"{max_cells} (Theorem 5.4 bound / slot-pool capacity): it "
-                "could never be admitted",
-                "shrink queue/join-buffer capacities or split the query",
-            ))
+            if plain <= max_cells:
+                out.append(_diag(
+                    "retry-slack", flow.sink_indices()[0],
+                    f"flow fits the budget at plain pricing ({plain} cells) "
+                    f"but the fault-tolerant retry slack prices it at {cells} "
+                    f"> {max_cells}: recovery headroom (doubled Lemma-5.2 "
+                    "slack) is what breaks admission",
+                    "grow the pool / budget, or disarm faults (recover=False) "
+                    "for this engine config",
+                ))
+            else:
+                out.append(_diag(
+                    "queue-over-pool", flow.sink_indices()[0],
+                    f"flow preallocates {cells} int32 queue cells > budget "
+                    f"{max_cells} (Theorem 5.4 bound / slot-pool capacity): it "
+                    "could never be admitted",
+                    "shrink queue/join-buffer capacities or split the query",
+                ))
     return out
 
 

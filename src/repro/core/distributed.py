@@ -33,6 +33,7 @@ stays structural (a compile-time constant, not a runtime promise).
 from __future__ import annotations
 
 import dataclasses
+import logging
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -43,6 +44,12 @@ from jax.experimental.shard_map import shard_map
 
 from repro.analysis.flowcheck import verify_flow
 from repro.core import operators as ops_mod
+from repro.core.faults import (
+    EnumerationFault,
+    FaultPlan,
+    QueuePressure,
+    ShardLoss,
+)
 from repro.core.dataflow import Dataflow, OpDesc, merge_flows, translate
 from repro.core.optimizer import optimal_plan
 from repro.core.cost import GraphStats
@@ -51,6 +58,9 @@ from repro.core.query import QueryGraph
 from repro.core.scheduler import AdaptiveScheduler
 from repro.graph.partition import partition_graph
 from repro.graph.storage import Graph, INVALID
+
+
+_log = logging.getLogger("repro.distributed")
 
 
 @dataclasses.dataclass
@@ -63,6 +73,12 @@ class DistConfig:
     rebalance: bool = True               # inter-machine work stealing
     fused: bool = False                  # fused extend/verify + probe kernels
     force_kernel: bool = False           # interpret-mode kernels on CPU (CI)
+    faults: Optional[FaultPlan] = None   # deterministic fault injection
+    recover: bool = True                 # restart-based recovery: SPMD
+    #   execution is deterministic, so a recoverable fault rebuilds the
+    #   runtimes and re-runs the flow (halved batch on QueuePressure)
+    max_retries: int = 3                 # recovery attempts per _execute
+    min_batch_size: int = 32             # degradation floor for batch halving
 
 
 class _DQueue:
@@ -133,8 +149,13 @@ class _DScanRT:
                 "delta-seeded scan on a distributed engine with no applied "
                 "update batch — call DistributedEngine.apply_updates first"
             )
-        self.rounds = eng.delta_scan_rounds if self.delta else eng.scan_rounds
+        # Rounds derive from the *current* batch size: scan sources are padded
+        # to a multiple of the configured batch, and recovery only ever halves
+        # it, so the division stays exact on degraded re-runs.
+        scan_len = eng.delta_scan_len if self.delta else eng.scan_len
+        self.rounds = scan_len // eng.cfg.batch_size
         self.step = eng._build_scan_step(desc)
+        self.query = ""
 
     def has_input(self) -> bool:
         return self.rounds_done < self.rounds
@@ -150,6 +171,7 @@ class _DScanRT:
 
     def run_one(self) -> None:
         e = self.e
+        e._inject(("queue-overflow", "shard-loss"), self.label, self.query)
         if self.delta:
             src, dst, totals = e.delta_src, e.delta_dst, e.delta_scan_totals
         else:
@@ -178,6 +200,8 @@ class _DExtendRT:
                 "applied update batch — call apply_updates first"
             )
         self.step = eng._build_extend_step(desc, self.is_verify)
+        self._ref_step = None  # lazily-built unfused twin (kernel-fail path)
+        self.query = ""
         # The steal all_to_all is statically elided when a batch's worst-case
         # output can't be split P ways (mirrors the out_w >= p trace guard).
         self.steal_traced = (
@@ -201,13 +225,33 @@ class _DExtendRT:
 
     def run_one(self) -> None:
         e = self.e
+        e._inject(("queue-overflow", "shard-loss"), self.label, self.query)
+        step = self.step
+        if (
+            e.cfg.fused
+            and not self.delta
+            and e.cfg.faults is not None
+            and e.cfg.faults.should_fire("kernel-fail", self.label)
+        ):
+            # One-shot graceful degradation: re-run this batch through the
+            # unfused (ref-twin) step program — exact, just slower.
+            e.stats["kernel_fallbacks"] += 1
+            _log.warning("fused %s kernel failed at op=%s query=%s; "
+                         "falling back to ref step",
+                         "verify" if self.is_verify else "extend",
+                         self.label, self.query)
+            if self._ref_step is None:
+                self._ref_step = e._build_extend_step(
+                    self.desc, self.is_verify, fused_override=False
+                )
+            step = self._ref_step
         if self.delta:
-            rem, buf, n, comm = self.step(
+            rem, buf, n, comm = step(
                 e.delta_adj, e.adj, self.in_q.buf, self.in_q.n,
                 self.out_q.buf, self.out_q.n,
             )
         else:
-            rem, buf, n, comm = self.step(
+            rem, buf, n, comm = step(
                 e.adj, self.in_q.buf, self.in_q.n, self.out_q.buf, self.out_q.n
             )
         self.in_q.set_n(rem)
@@ -240,6 +284,8 @@ class _DJoinRT:
         self.rshuf = eng._build_shuffle_step(desc.key_right[0])
         self.prep = eng._build_prepare_step(desc.key_left)
         self.probe = eng._build_probe_step(desc)
+        self._ref_probe = None  # lazily-built unfused probe (kernel-fail path)
+        self.query = ""
         self._sorted: Optional[Tuple[jax.Array, jax.Array]] = None
         # installed by the engine: () -> bool, True once every ancestor of the
         # left input (and the left queue itself) has drained
@@ -308,6 +354,7 @@ class _DJoinRT:
 
     def run_one(self) -> None:
         e = self.e
+        e._inject(("join-overflow", "shard-loss"), self.label, self.query)
         a = self._runnable()
         if a == "lshuf":
             self._shuffle(self.lshuf, self.left_q, self.lbuf)
@@ -318,14 +365,31 @@ class _DJoinRT:
         if self._sorted is None:
             # Barrier released: external merge sort of the buffered branch.
             self._sorted = self.prep(self.lbuf.buf, self.lbuf.n)
-        out_buf, out_n, rem, overflow = self.probe(
+        probe = self.probe
+        if (
+            e.cfg.fused
+            and e.cfg.faults is not None
+            and e.cfg.faults.should_fire("kernel-fail", self.label)
+        ):
+            # One-shot fallback to the binary-search probe (exact ref twin).
+            e.stats["kernel_fallbacks"] += 1
+            _log.warning("probe bounds kernel failed at op=%s query=%s; "
+                         "using ref probe", self.label, self.query)
+            if self._ref_probe is None:
+                self._ref_probe = e._build_probe_step(
+                    self.desc, use_kernel_override=False
+                )
+            probe = self._ref_probe
+        out_buf, out_n, rem, overflow = probe(
             self._sorted[0], self._sorted[1], self.rbuf.buf, self.rbuf.n,
             self.out_q.buf, self.out_q.n,
         )
         if bool(jnp.any(overflow)):
-            raise RuntimeError(
-                "distributed PUSH-JOIN output overflow: raise join_out_capacity "
-                "or lower batch_size (results would be lost)"
+            raise QueuePressure(
+                "join-overflow",
+                "distributed PUSH-JOIN probe exceeded join_out_capacity="
+                f"{e.cfg.join_out_capacity} (results would be lost)",
+                op=self.label, query=self.query,
             )
         self.rbuf.set_n(rem)
         self.out_q.set(out_buf, out_n)
@@ -376,7 +440,7 @@ class DistributedEngine:
         # Delta state (streaming): armed by apply_updates.
         self.delta_adj: Optional[jax.Array] = None
         self.delta_src = self.delta_dst = self.delta_scan_totals = None
-        self.delta_scan_rounds = 0
+        self.delta_scan_len = 0
         self.stats: Dict[str, object] = {}
 
     def _sharded_edge_lists(self, graph: Graph):
@@ -403,7 +467,7 @@ class DistributedEngine:
             jax.device_put(jnp.asarray(src), self.sh(2)),
             jax.device_put(jnp.asarray(dst), self.sh(2)),
             jax.device_put(jnp.asarray(totals), self.sh(1)),
-            max_e // b,
+            max_e,
         )
 
     def _load_graph(self, graph: Graph) -> None:
@@ -413,7 +477,7 @@ class DistributedEngine:
         self.v = graph.num_vertices
         self.d_pad = self.pg.d_pad
         self.adj = jax.device_put(self.pg.adj, self.sh(3))
-        self.src, self.dst, self.scan_totals, self.scan_rounds = (
+        self.src, self.dst, self.scan_totals, self.scan_len = (
             self._sharded_edge_lists(graph)
         )
 
@@ -442,7 +506,7 @@ class DistributedEngine:
             self.delta_src,
             self.delta_dst,
             self.delta_scan_totals,
-            self.delta_scan_rounds,
+            self.delta_scan_len,
         ) = self._sharded_edge_lists(delta)
         return applied
 
@@ -560,12 +624,15 @@ class DistributedEngine:
 
         return self._shardmap(f, 6, 2)
 
-    def _build_extend_step(self, op: OpDesc, is_verify: bool):
+    def _build_extend_step(self, op: OpDesc, is_verify: bool,
+                           fused_override: Optional[bool] = None):
         b = self.cfg.batch_size
         ext, lt, gt = op.ext, op.lt_positions, op.gt_positions
         vpos = op.verify_pos
         rebalance = self.cfg.rebalance
         fused, force_kernel = self.cfg.fused, self.cfg.force_kernel
+        if fused_override is not None:
+            fused = fused_override  # kernel-fail degradation builds a ref twin
         p = self.p
         # Old-epoch ops veto delta membership against the *replicated* delta
         # adjacency (spec P() below); the fused kernels know nothing of
@@ -710,13 +777,16 @@ class DistributedEngine:
 
         return self._shardmap(f, 2, 2)
 
-    def _build_probe_step(self, op: OpDesc):
+    def _build_probe_step(self, op: OpDesc,
+                          use_kernel_override: Optional[bool] = None):
         b = self.cfg.batch_size
         out_cap = self.cfg.join_out_capacity
         key_right, right_extra = op.key_right, op.right_extra
         cross_neq, cross_lt = op.cross_neq, op.cross_lt
 
         use_kernel, force_kernel = self.cfg.fused, self.cfg.force_kernel
+        if use_kernel_override is not None:
+            use_kernel = use_kernel_override
 
         def f(skeys, sbuf, r_buf, r_n, out_buf, out_n):
             rrows, take, rem = ops_mod.queue_pop(r_buf[0], r_n[0], b)
@@ -772,6 +842,7 @@ class DistributedEngine:
         for i, rt in enumerate(runtimes):
             t = 0 if tenant_of_op is None else tenant_of_op[i]
             rt.tenant = t
+            rt.query = flow.query_name
             if tenant_of_op is not None:
                 rt.label = f"t{t}:{rt.label}"
             if i in queues:
@@ -902,30 +973,95 @@ class DistributedEngine:
         verify_flow(flow)
         return flow
 
+    # -- fault injection (core/faults.py) --------------------------------------
+
+    def _inject(self, kinds: Tuple[str, ...], op: str, query: str = "") -> None:
+        """Probe the armed FaultPlan at an operator invocation and raise the
+        matching structured fault (host-side only; never inside shard_map)."""
+        fp = self.cfg.faults
+        if fp is None:
+            return
+        for kind in kinds:
+            if fp.should_fire(kind, op):
+                if kind == "shard-loss":
+                    raise ShardLoss(fp.seed % self.p, op=op, query=query)
+                raise QueuePressure(kind, "injected fault", op=op, query=query)
+
     def _execute(
         self, flow: Dataflow, tenant_of_op: Optional[Tuple[int, ...]] = None
     ):
-        # Release the previous run's runtimes (and their device queues) before
-        # allocating fresh ones, so back-to-back runs don't hold both sets.
-        self._last_runtimes = None
-        self.stats = {
-            "engine": "shard_map",
-            "shards": self.p,
-            "joins": flow.num_joins(),
-            "rounds": 0,
-            "a2a_calls": 0,
-            "pulled_vids": 0,
-            "pulled_bytes": 0,
-            "shuffle_rows": 0,
-            "shuffle_bytes": 0,
-            "steal_rows": 0,
-            "steal_bytes": 0,
-            "probe_batches": 0,
-        }
-        runtimes = self._build_runtimes(flow, tenant_of_op)
-        self._last_runtimes = runtimes  # debugging / test introspection
-        sched = AdaptiveScheduler(runtimes)
-        st = sched.run()
-        self.stats["sched_steps"] = st.steps
-        self.stats["sched_backtracks"] = st.backtracks
-        return runtimes, st
+        """Build runtimes and drive one scheduler pass, with restart-based
+        recovery (DESIGN.md §Fault-tolerance): SPMD execution is
+        deterministic, so a recoverable fault rebuilds the runtimes — fresh
+        queues, zero counts — and re-runs the whole flow, halving the batch
+        on QueuePressure. The original config is restored on exit, so
+        degradation never leaks across queries."""
+        orig_cfg = self.cfg
+        attempts = restarts = pressure = 0
+        try:
+            while True:
+                # Release the previous run's runtimes (and device queues)
+                # before allocating fresh ones, so back-to-back runs/retries
+                # don't hold both sets.
+                self._last_runtimes = None
+                self.stats = {
+                    "engine": "shard_map",
+                    "shards": self.p,
+                    "joins": flow.num_joins(),
+                    "rounds": 0,
+                    "a2a_calls": 0,
+                    "pulled_vids": 0,
+                    "pulled_bytes": 0,
+                    "shuffle_rows": 0,
+                    "shuffle_bytes": 0,
+                    "steal_rows": 0,
+                    "steal_bytes": 0,
+                    "probe_batches": 0,
+                    "kernel_fallbacks": 0,
+                    "retries": attempts,
+                    "restarts": restarts,
+                    "pressure_events": pressure,
+                }
+                runtimes = self._build_runtimes(flow, tenant_of_op)
+                self._last_runtimes = runtimes  # debugging / test introspection
+                sched = AdaptiveScheduler(runtimes, dfs_bias=attempts > 0)
+                try:
+                    st = sched.run()
+                except EnumerationFault as f:
+                    if (
+                        not orig_cfg.recover
+                        or not f.recoverable
+                        or attempts >= orig_cfg.max_retries
+                    ):
+                        raise
+                    attempts += 1
+                    if isinstance(f, ShardLoss):
+                        restarts += 1
+                        _log.warning(
+                            "restarting after %s (attempt %d/%d)",
+                            f, attempts, orig_cfg.max_retries,
+                        )
+                    else:
+                        pressure += 1
+                        nb = max(self.cfg.batch_size // 2,
+                                 orig_cfg.min_batch_size)
+                        if nb >= self.cfg.batch_size:
+                            raise EnumerationFault(
+                                f.kind,
+                                "recovery ladder exhausted: batch already at "
+                                f"floor {self.cfg.batch_size} (raise queue "
+                                "capacities or min_batch_size)",
+                                op=f.op, query=f.query,
+                            ) from f
+                        _log.warning(
+                            "restarting after %s (attempt %d/%d): "
+                            "batch %d -> %d", f, attempts,
+                            orig_cfg.max_retries, self.cfg.batch_size, nb,
+                        )
+                        self.cfg = dataclasses.replace(self.cfg, batch_size=nb)
+                    continue
+                self.stats["sched_steps"] = st.steps
+                self.stats["sched_backtracks"] = st.backtracks
+                return runtimes, st
+        finally:
+            self.cfg = orig_cfg

@@ -20,8 +20,10 @@ engine with real collectives is distributed.py.
 """
 from __future__ import annotations
 
+import copy
 import dataclasses
 import functools
+import logging
 import time
 from typing import Dict, List, Optional, Tuple
 
@@ -30,6 +32,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import cache as lrbu
+from repro.core.faults import (
+    EnumerationFault,
+    FaultPlan,
+    KernelFault,
+    QueuePressure,
+    ShardLoss,
+)
 from repro.core import operators as ops_mod
 from repro.core.cost import GraphStats
 from repro.core.dataflow import (
@@ -50,6 +59,8 @@ from repro.graph.storage import (
     INVALID,
     apply_updates as storage_apply_updates,
 )
+
+_log = logging.getLogger("repro.engine")
 
 
 # ---------------------------------------------------------------------------
@@ -74,6 +85,13 @@ class EngineConfig:
     #   the compare-count bounds kernel inside PUSH-JOIN probes
     force_kernel: bool = False             # run fused kernels in interpret mode
     #   on CPU (CI parity); otherwise non-TPU backends use the ref twins
+    faults: Optional[FaultPlan] = None     # deterministic fault injection
+    recover: bool = True                   # graceful-degradation ladder on
+    #   recoverable faults (DESIGN.md §Fault-tolerance); False = fail fast
+    max_retries: int = 4                   # recovery attempts per driven run
+    min_batch_size: int = 32               # degradation floor for batch halving
+    checkpoint_every_steps: int = 0        # snapshot cadence inside drive()
+    #   (0 = a single snapshot at start; a crash replays the whole query)
 
 
 @dataclasses.dataclass
@@ -90,6 +108,10 @@ class EngineStats:
     peak_queue_rows: int = 0
     peak_queue_bytes: int = 0
     join_overflows: int = 0
+    kernel_fallbacks: int = 0   # fused-kernel failures degraded to the ref twin
+    pressure_events: int = 0    # QueuePressure signals absorbed by recovery
+    retries: int = 0            # checkpoint restores (pressure + shard loss)
+    restarts: int = 0           # of which: shard-loss recoveries
     wall_time: float = 0.0
     per_machine_rows: Optional[np.ndarray] = None
 
@@ -162,18 +184,26 @@ _POLICIES = {
 # ---------------------------------------------------------------------------
 
 class DeviceQueue:
-    def __init__(self, capacity: int, width: int):
+    def __init__(self, capacity: int, width: int, label: str = "queue",
+                 query: str = ""):
         self.buf = jnp.full((capacity, width), INVALID, jnp.int32)
         self.n = 0  # host-side authoritative count
         self.capacity = capacity
         self.width = width
+        self.label = label   # producing op's label (fault attribution)
+        self.query = query   # owning dataflow's query name
 
     def append(self, rows: jax.Array, m) -> int:
         m_host = int(m)
         if self.n + m_host > self.capacity:
-            raise RuntimeError(
-                f"queue overflow: {self.n}+{m_host} > {self.capacity} "
-                "(scheduler slack invariant violated)"
+            # Recoverable pressure, not a crash: the drive()/service recovery
+            # ladder restores the last checkpoint at a halved batch (Lemma 5.2
+            # slack is a soft bound under degradation).
+            raise QueuePressure(
+                "queue-overflow",
+                f"{self.n}+{m_host} > {self.capacity} rows "
+                "(scheduler slack invariant violated)",
+                op=self.label, query=self.query,
             )
         self.buf, _ = ops_mod.queue_append(self.buf, jnp.int32(self.n), rows, m)
         self.n += m_host
@@ -203,6 +233,11 @@ class _BaseRT:
         self.desc = desc
         self.out_q = out_q
         self.label = desc.label()
+        # Per-session batch size: the recovery ladder restores a session at a
+        # halved batch without touching the engine config (queue *pricing*
+        # stays at cfg.batch_size, so a degraded session's lease is unchanged).
+        self.batch = engine.cfg.batch_size
+        self.query = ""  # owning dataflow's query name (fault attribution)
 
     def output_free(self) -> int:
         return self.out_q.free() if self.out_q is not None else 1 << 62
@@ -230,18 +265,19 @@ class _ScanRT(_BaseRT):
         return self.cursor < self.total
 
     def required_slack(self) -> int:
-        return self.e.cfg.batch_size
+        return self.batch
 
     def run_one(self) -> None:
         e = self.e
+        e._inject(("queue-overflow", "shard-loss"), self.label, self.query)
         t0 = time.perf_counter()
         src = e.delta_src_pad if self.delta else e.src_pad
         dst = e.delta_dst_pad if self.delta else e.dst_pad
         rows, n = ops_mod.scan_batch(
             src, dst, jnp.int32(self.cursor), jnp.int32(self.total),
-            e.cfg.batch_size, self.desc.lt_positions, self.desc.gt_positions,
+            self.batch, self.desc.lt_positions, self.desc.gt_positions,
         )
-        self.cursor += e.cfg.batch_size
+        self.cursor += self.batch
         m = self.out_q.append(rows, n)
         e.stats.compute_time += time.perf_counter() - t0
         e.stats.batches += 1
@@ -258,11 +294,12 @@ class _ExtendRT(_BaseRT):
         return self.in_q.n > 0
 
     def required_slack(self) -> int:
-        return self.e.cfg.batch_size * self.e.d_pad
+        return self.batch * self.e.d_pad
 
     def run_one(self) -> None:
         e = self.e
-        rows, n = self.in_q.pop(e.cfg.batch_size)
+        e._inject(("queue-overflow", "shard-loss"), self.label, self.query)
+        rows, n = self.in_q.pop(self.batch)
         if self.comm == "pull":
             e.fetch_stage(rows, n, self.desc.ext)
         elif self.comm == "push":
@@ -276,19 +313,36 @@ class _ExtendRT(_BaseRT):
                 e.adj, e.delta_adj, rows, n, self.desc.ext,
                 tuple(ep == "old" for ep in self.desc.ext_epochs),
                 self.desc.lt_positions, self.desc.gt_positions,
-                e.cfg.batch_size * e.d_pad,
+                self.batch * e.d_pad,
             )
         elif e.cfg.fused:
-            tab0, tab1, idx, sel, ok = e._fused_tables(rows, self.desc.ext)
-            out, m = ops_mod.fused_extend_batch(
-                tab0, tab1, idx, sel, ok, rows, n,
-                self.desc.lt_positions, self.desc.gt_positions,
-                e.cfg.batch_size * e.d_pad, force_kernel=e.cfg.force_kernel,
-            )
+            try:
+                if e.cfg.faults is not None and e.cfg.faults.should_fire(
+                    "kernel-fail", self.label
+                ):
+                    raise KernelFault("injected fused-kernel failure",
+                                      op=self.label, query=self.query)
+                tab0, tab1, idx, sel, ok = e._fused_tables(rows, self.desc.ext)
+                out, m = ops_mod.fused_extend_batch(
+                    tab0, tab1, idx, sel, ok, rows, n,
+                    self.desc.lt_positions, self.desc.gt_positions,
+                    self.batch * e.d_pad, force_kernel=e.cfg.force_kernel,
+                )
+            except KernelFault as kf:
+                # One-shot graceful degradation: the ref twin is exact, so a
+                # failed kernel batch is recomputed unfused instead of failing
+                # the query (stat: kernel_fallbacks).
+                e.stats.kernel_fallbacks += 1
+                _log.warning("fused extend fell back to ref twin: %s", kf)
+                out, m = ops_mod.extend_batch(
+                    e.adj, rows, n, self.desc.ext, self.desc.lt_positions,
+                    self.desc.gt_positions, self.batch * e.d_pad,
+                    use_kernel=False,
+                )
         else:
             out, m = ops_mod.extend_batch(
                 e.adj, rows, n, self.desc.ext, self.desc.lt_positions,
-                self.desc.gt_positions, e.cfg.batch_size * e.d_pad,
+                self.desc.gt_positions, self.batch * e.d_pad,
                 use_kernel=e.cfg.use_intersect_kernel,
             )
         cnt = self.out_q.append(out, m)
@@ -307,11 +361,12 @@ class _VerifyRT(_BaseRT):
         return self.in_q.n > 0
 
     def required_slack(self) -> int:
-        return self.e.cfg.batch_size
+        return self.batch
 
     def run_one(self) -> None:
         e = self.e
-        rows, n = self.in_q.pop(e.cfg.batch_size)
+        e._inject(("queue-overflow", "shard-loss"), self.label, self.query)
+        rows, n = self.in_q.pop(self.batch)
         if self.comm == "pull":
             e.fetch_stage(rows, n, self.desc.ext)
         t0 = time.perf_counter()
@@ -319,17 +374,30 @@ class _VerifyRT(_BaseRT):
             out, m = ops_mod.delta_verify_batch(
                 e.adj, e.delta_adj, rows, n, self.desc.ext,
                 tuple(ep == "old" for ep in self.desc.ext_epochs),
-                self.desc.verify_pos, e.cfg.batch_size,
+                self.desc.verify_pos, self.batch,
             )
         elif e.cfg.fused:
-            tab0, tab1, idx, sel, ok = e._fused_tables(rows, self.desc.ext)
-            out, m = ops_mod.fused_verify_batch(
-                tab0, tab1, idx, sel, ok, rows, n, self.desc.verify_pos,
-                e.cfg.batch_size, force_kernel=e.cfg.force_kernel,
-            )
+            try:
+                if e.cfg.faults is not None and e.cfg.faults.should_fire(
+                    "kernel-fail", self.label
+                ):
+                    raise KernelFault("injected fused-kernel failure",
+                                      op=self.label, query=self.query)
+                tab0, tab1, idx, sel, ok = e._fused_tables(rows, self.desc.ext)
+                out, m = ops_mod.fused_verify_batch(
+                    tab0, tab1, idx, sel, ok, rows, n, self.desc.verify_pos,
+                    self.batch, force_kernel=e.cfg.force_kernel,
+                )
+            except KernelFault as kf:
+                e.stats.kernel_fallbacks += 1
+                _log.warning("fused verify fell back to ref twin: %s", kf)
+                out, m = ops_mod.verify_batch(
+                    e.adj, rows, n, self.desc.ext, self.desc.verify_pos,
+                    self.batch,
+                )
         else:
             out, m = ops_mod.verify_batch(
-                e.adj, rows, n, self.desc.ext, self.desc.verify_pos, e.cfg.batch_size
+                e.adj, rows, n, self.desc.ext, self.desc.verify_pos, self.batch
             )
         cnt = self.out_q.append(out, m)
         e.stats.compute_time += time.perf_counter() - t0
@@ -350,7 +418,6 @@ class _JoinRT(_BaseRT):
         self.left_q = left_q
         self.right_q = right_q
         self.shuffle_charged = False
-        self.right_batch = max(64, engine.cfg.batch_size)
         self._prepared = None  # (sorted_keys, sorted_buf) once left side final
         self.left_branch_done = lambda: True  # installed by the engine
 
@@ -362,6 +429,7 @@ class _JoinRT(_BaseRT):
 
     def run_one(self) -> None:
         e = self.e
+        e._inject(("join-overflow", "shard-loss"), self.label, self.query)
         frac = (e.cfg.num_machines - 1) / max(1, e.cfg.num_machines)
         if not self.shuffle_charged:
             # Left side is complete at the barrier: charge its shuffle once.
@@ -376,20 +444,33 @@ class _JoinRT(_BaseRT):
                 self.left_q.buf, jnp.int32(self.left_q.n), self.desc.key_left
             )
             e.stats.compute_time += time.perf_counter() - t0
-        rrows, rn = self.right_q.pop(self.right_batch)
+        rrows, rn = self.right_q.pop(max(64, self.batch))
         e.stats.pushed_bytes += int(int(rn) * self.right_q.width * 4 * frac)
         t0 = time.perf_counter()
+        use_kernel = e.cfg.fused
+        if use_kernel and e.cfg.faults is not None and e.cfg.faults.should_fire(
+            "kernel-fail", self.label
+        ):
+            # One-shot degradation for the probe's bounds kernel: the binary-
+            # search ref path is exact, so the batch recomputes unfused.
+            e.stats.kernel_fallbacks += 1
+            _log.warning("join probe kernel failed at op=%s; using ref bounds",
+                         self.label)
+            use_kernel = False
         out, m, overflow = ops_mod.join_probe(
             self._prepared[0], self._prepared[1], rrows, rn,
             self.desc.key_right, self.desc.right_extra,
             self.desc.cross_neq, self.desc.cross_lt, e.cfg.join_out_capacity,
-            use_kernel=e.cfg.fused, force_kernel=e.cfg.force_kernel,
+            use_kernel=use_kernel, force_kernel=e.cfg.force_kernel,
         )
         if bool(overflow):
             e.stats.join_overflows += 1
-            raise RuntimeError(
-                "PUSH-JOIN output overflow: raise join_out_capacity or lower "
-                "right_batch (results would be lost)"
+            raise QueuePressure(
+                "join-overflow",
+                f"probe output exceeded join_out_capacity="
+                f"{e.cfg.join_out_capacity} with right batch {int(rn)} "
+                "(results would be lost)",
+                op=self.label, query=self.query,
             )
         cnt = self.out_q.append(out, m)
         e.stats.compute_time += time.perf_counter() - t0
@@ -453,8 +534,21 @@ class QueueSlotPool:
         return True
 
     def release(self, cells: int) -> None:
+        # Not an assert (stripped under python -O): over-release is pool-
+        # accounting corruption — clamp so the pool stays usable, then raise
+        # with the offending lease size so the caller is attributable.
+        if cells > self.leased_cells:
+            leaked = cells - self.leased_cells
+            _log.error(
+                "queue-slot pool over-release: released %d cells with only %d "
+                "leased (%d excess)", cells, self.leased_cells, leaked,
+            )
+            self.leased_cells = 0
+            raise RuntimeError(
+                f"queue-slot pool released {cells} cells but only "
+                f"{cells - leaked} were leased (over-release of {leaked})"
+            )
         self.leased_cells -= cells
-        assert self.leased_cells >= 0, "queue-slot pool released more than leased"
 
 
 class _ScopedRT:
@@ -466,13 +560,15 @@ class _ScopedRT:
     stats mutation — runtimes, fetch_stage, push accounting — goes through
     ``engine.stats``), keeping the underlying runtimes untouched."""
 
-    __slots__ = ("rt", "e", "stats", "label")
+    __slots__ = ("rt", "e", "stats", "label", "session")
 
-    def __init__(self, rt: _BaseRT, engine: "HugeEngine", stats: EngineStats):
+    def __init__(self, rt: _BaseRT, engine: "HugeEngine", stats: EngineStats,
+                 session: "EngineSession" = None):
         self.rt = rt
         self.e = engine
         self.stats = stats
         self.label = rt.label
+        self.session = session
 
     def has_input(self) -> bool:
         return self.rt.has_input()
@@ -488,8 +584,23 @@ class _ScopedRT:
         self.e.stats = self.stats
         try:
             self.rt.run_one()
+        except EnumerationFault as f:
+            # Attribute the fault to the owning session so a multi-tenant
+            # scheduler pass can fail/recover exactly one query.
+            f.session = self.session
+            raise
         finally:
             self.e.stats = prev
+
+
+def fault_tolerant_sizing(cfg: EngineConfig) -> bool:
+    """Whether queue sizing must include retry slack: true when a fault plan
+    is armed *and* the recovery ladder is on (a recovered retry replays a
+    checkpointed batch while the original batch may still occupy its queue,
+    so each queue needs a second worst-case batch of Lemma 5.2 slack)."""
+    return getattr(cfg, "faults", None) is not None and getattr(
+        cfg, "recover", False
+    )
 
 
 def _queue_plan(
@@ -498,16 +609,23 @@ def _queue_plan(
     d_pad: int,
     queue_capacity: int | None = None,
     join_buffer_capacity: int | None = None,
+    fault_tolerant: bool | None = None,
 ) -> Dict[int, Tuple[int, int]]:
     """Queue sizing for a dataflow: ``{op_index: (physical_rows, width)}``.
 
     An op feeding a PUSH-JOIN buffers its side fully; every queue carries one
     worst-case batch of slack on top (the Lemma 5.2 overflow allowance — also
-    what lets a join feed another join). Shared by session allocation and by
-    the service's admission check (which must price a query *before* paying
-    for it)."""
+    what lets a join feed another join). Fault-tolerant configs (armed fault
+    plan + recovery on) double that slack: a post-restore retry can re-append
+    a replayed batch on top of rows the original attempt already parked
+    (flowcheck rule ``retry-slack`` catches pricing that ignores this).
+    Shared by session allocation and by the service's admission check (which
+    must price a query *before* paying for it)."""
     qcap = cfg.queue_capacity if queue_capacity is None else queue_capacity
     jcap = cfg.join_buffer_capacity if join_buffer_capacity is None else join_buffer_capacity
+    if fault_tolerant is None:
+        fault_tolerant = fault_tolerant_sizing(cfg)
+    slack_mult = 2 if fault_tolerant else 1
     succ: Dict[int, int] = {}
     for i, op in enumerate(flow.ops):
         for j in op.inputs:
@@ -521,7 +639,7 @@ def _queue_plan(
             "verify": cfg.batch_size,
             "extend": cfg.batch_size * d_pad,
             "join": cfg.join_out_capacity,
-        }[op.kind]
+        }[op.kind] * slack_mult
         s = succ.get(i)
         if s is not None and flow.ops[s].kind == "join":
             cap = jcap + slack
@@ -537,13 +655,17 @@ def flow_queue_cells(
     d_pad: int,
     queue_capacity: int | None = None,
     join_buffer_capacity: int | None = None,
+    fault_tolerant: bool | None = None,
 ) -> int:
     """Total int32 cells a session over ``flow`` will preallocate — the
-    quantity a ``QueueSlotPool`` lease is denominated in."""
+    quantity a ``QueueSlotPool`` lease is denominated in. ``fault_tolerant``
+    defaults to deriving from ``cfg`` (see ``fault_tolerant_sizing``), so
+    pricing and allocation always agree."""
     return sum(
         cap * width
         for cap, width in _queue_plan(
-            flow, cfg, d_pad, queue_capacity, join_buffer_capacity
+            flow, cfg, d_pad, queue_capacity, join_buffer_capacity,
+            fault_tolerant,
         ).values()
     )
 
@@ -563,16 +685,25 @@ class EngineSession:
         stats: EngineStats | None = None,
         queue_capacity: int | None = None,
         join_buffer_capacity: int | None = None,
+        batch_size: int | None = None,
+        dfs_bias: bool = False,
     ):
         self.engine = engine
         self.flow = flow
         self.stats = stats if stats is not None else EngineStats()
         self.sched_stats = ScheduleStats()
+        # Per-session degradation state: a restored session may run a smaller
+        # batch with a DFS-biased scheduler while keeping cfg-priced queues
+        # (so its QueueSlotPool lease is unchanged).
+        self.batch_size = int(batch_size) if batch_size else engine.cfg.batch_size
+        self.dfs_bias = dfs_bias
         ops = flow.ops
         plan = _queue_plan(flow, engine.cfg, engine.d_pad,
                            queue_capacity, join_buffer_capacity)
         self.queues: Dict[int, DeviceQueue] = {
-            i: DeviceQueue(cap, width) for i, (cap, width) in plan.items()
+            i: DeviceQueue(cap, width, label=ops[i].label(),
+                           query=flow.query_name)
+            for i, (cap, width) in plan.items()
         }
         self.queue_cells = sum(cap * width for cap, width in plan.values())
 
@@ -596,6 +727,9 @@ class EngineSession:
                 )
             else:
                 self.runtimes[i] = _SinkRT(engine, op, self.queues[op.inputs[0]])
+        for rt in self.runtimes.values():
+            rt.batch = self.batch_size
+            rt.query = flow.query_name
 
         # Join barriers: a PUSH-JOIN may only probe once every ancestor of its
         # left (buffered) input has drained. With the barrier inside each
@@ -616,7 +750,8 @@ class EngineSession:
 
         # Topologically ordered, stats-scoped view for shared scheduler passes.
         self.chain = [
-            _ScopedRT(self.runtimes[i], engine, self.stats) for i in range(len(ops))
+            _ScopedRT(self.runtimes[i], engine, self.stats, session=self)
+            for i in range(len(ops))
         ]
 
     # -- introspection -------------------------------------------------------
@@ -635,18 +770,116 @@ class EngineSession:
     def memory_probe(self) -> Tuple[int, int]:
         return self.rows_in_flight(), self.bytes_in_flight()
 
+    # -- checkpoint / resume (DESIGN.md §Fault-tolerance) --------------------
+
+    def snapshot(self) -> Dict[str, object]:
+        """Host-side capture of the session's complete execution state.
+
+        Taken *between* scheduler steps, queue contents plus the host-side
+        cursors (scan position, join shuffle flag, sink rows, stats) are the
+        entire state — all device arrays other than queue rows are immutable
+        graph data. ``restore`` therefore resumes exactly-once-correct:
+        stats roll back to the snapshot, so rows replayed after a restore are
+        never double-counted. Shuffle-byte accounting for already-popped join
+        batches may be re-charged on replay (counts stay exact; comm stats
+        are approximate under recovery)."""
+        queues: Dict[int, Tuple[np.ndarray, int]] = {}
+        for i, q in self.queues.items():
+            rows = (
+                np.asarray(q.buf[: q.n]).copy()
+                if q.n
+                else np.zeros((0, q.width), np.int32)
+            )
+            queues[i] = (rows, q.n)
+        return {
+            "query": self.flow.query_name,
+            "batch_size": self.batch_size,
+            "queues": queues,
+            "scan_cursors": {
+                i: rt.cursor
+                for i, rt in self.runtimes.items()
+                if isinstance(rt, _ScanRT)
+            },
+            "join_charged": {
+                i: rt.shuffle_charged
+                for i, rt in self.runtimes.items()
+                if isinstance(rt, _JoinRT)
+            },
+            "sink_rows": {
+                i: [r.copy() for r in rt.rows_out]
+                for i, rt in self.runtimes.items()
+                if isinstance(rt, _SinkRT)
+            },
+            "stats": copy.copy(self.stats),
+            "sched_stats": copy.copy(self.sched_stats),
+        }
+
+    @classmethod
+    def restore(
+        cls,
+        engine: "HugeEngine",
+        flow: Dataflow,
+        snap: Dict[str, object],
+        *,
+        stats: EngineStats | None = None,
+        queue_capacity: int | None = None,
+        join_buffer_capacity: int | None = None,
+        batch_size: int | None = None,
+        dfs_bias: bool = False,
+    ) -> "EngineSession":
+        """Rebuild a session from ``snapshot()``, optionally degraded to a
+        smaller ``batch_size`` (the recovery ladder's halving). Queue
+        capacities come from the same pricing as a fresh session, so a
+        restored query's slot-pool lease is identical to the original's.
+        When ``stats`` is supplied (e.g. the ticket's stats object), snapshot
+        values are written into it in place so existing references stay
+        valid."""
+        if snap.get("query") not in ("", None, flow.query_name):
+            raise ValueError(
+                f"snapshot is for query {snap['query']!r}, not "
+                f"{flow.query_name!r}"
+            )
+        sess = cls(
+            engine, flow, stats=stats, queue_capacity=queue_capacity,
+            join_buffer_capacity=join_buffer_capacity,
+            batch_size=batch_size or snap["batch_size"], dfs_bias=dfs_bias,
+        )
+        for i, (rows, n) in snap["queues"].items():
+            q = sess.queues[i]
+            if n > q.capacity:
+                raise ValueError(
+                    f"snapshot queue {i} holds {n} rows but the restored "
+                    f"queue caps at {q.capacity}"
+                )
+            if n:
+                q.buf = q.buf.at[:n].set(jnp.asarray(rows))
+            q.n = int(n)
+        for i, cur in snap["scan_cursors"].items():
+            sess.runtimes[i].cursor = int(cur)
+        for i, charged in snap["join_charged"].items():
+            sess.runtimes[i].shuffle_charged = bool(charged)
+        for i, rows in snap["sink_rows"].items():
+            sess.runtimes[i].rows_out = [r.copy() for r in rows]
+        sess.stats.__dict__.update(copy.copy(snap["stats"]).__dict__)
+        sess.sched_stats.__dict__.update(copy.copy(snap["sched_stats"]).__dict__)
+        return sess
+
     # -- execution -----------------------------------------------------------
 
     def tick(self, max_steps: int) -> ScheduleStats:
         """Run up to ``max_steps`` operator batches of this session only
         (single-tenant cooperative slice; the multi-tenant service instead
         concatenates several sessions' chains into one pass)."""
-        st = AdaptiveScheduler(self.chain, memory_probe=self.memory_probe).run(max_steps)
+        st = AdaptiveScheduler(
+            self.chain, memory_probe=self.memory_probe, dfs_bias=self.dfs_bias
+        ).run(max_steps)
         self.sched_stats.merge(st)
         return st
 
     def run(self) -> ScheduleStats:
-        st = AdaptiveScheduler(self.chain, memory_probe=self.memory_probe).run()
+        st = AdaptiveScheduler(
+            self.chain, memory_probe=self.memory_probe, dfs_bias=self.dfs_bias
+        ).run()
         self.sched_stats.merge(st)
         return st
 
@@ -790,7 +1023,8 @@ class HugeEngine:
         flows = delta_flows(plan)
         merged, _ = merge_flows(flows)
         session = self.prepare(merged)
-        session.run()
+        self._queues = session.queues
+        session = self.drive(session)
         result = session.result()
         result.stats.wall_time = time.perf_counter() - t_start
         return result
@@ -874,6 +1108,22 @@ class HugeEngine:
         nbytes = sum(q.bytes_used() for q in self._queues.values())
         return rows, nbytes
 
+    # -- fault injection (core/faults.py) --------------------------------------
+
+    def _inject(self, kinds: Tuple[str, ...], op: str, query: str = "") -> None:
+        """Probe the armed FaultPlan at an operator invocation and raise the
+        matching structured fault. Host-side only — never reached from traced
+        code, so jit caches are fault-agnostic."""
+        fp = self.cfg.faults
+        if fp is None:
+            return
+        for kind in kinds:
+            if fp.should_fire(kind, op):
+                if kind == "shard-loss":
+                    raise ShardLoss(fp.seed % self.cfg.num_machines,
+                                    op=op, query=query)
+                raise QueuePressure(kind, "injected fault", op=op, query=query)
+
     # -- execution --------------------------------------------------------------
 
     def to_flow(
@@ -922,6 +1172,68 @@ class HugeEngine:
             join_buffer_capacity=join_buffer_capacity,
         )
 
+    def drive(self, session: EngineSession) -> EngineSession:
+        """Run a session to completion under the graceful-degradation ladder
+        (DESIGN.md §Fault-tolerance). On a recoverable fault the last
+        checkpoint is restored — at half the batch with a DFS-biased
+        scheduler for ``QueuePressure`` (drain before produce), unchanged for
+        ``ShardLoss`` (enumeration is deterministic, so replay is exact) —
+        and the run retries, up to ``cfg.max_retries`` times and never below
+        ``cfg.min_batch_size``. Returns the session holding the final state
+        (a *new* object when recovery restored). With ``cfg.recover`` off the
+        session runs once and any fault propagates."""
+        cfg = self.cfg
+        if not cfg.recover:
+            session.run()
+            return session
+        ckpt_steps = cfg.checkpoint_every_steps
+        snap = session.snapshot()
+        retries = 0
+        while True:
+            try:
+                if ckpt_steps > 0:
+                    while not session.done():
+                        session.tick(ckpt_steps)
+                        snap = session.snapshot()
+                else:
+                    session.run()
+                return session
+            except EnumerationFault as f:
+                if not f.recoverable or retries >= cfg.max_retries:
+                    raise
+                retries += 1
+                prev_batch = snap["batch_size"]
+                if isinstance(f, ShardLoss):
+                    new_batch = prev_batch
+                else:
+                    new_batch = max(prev_batch // 2, cfg.min_batch_size)
+                    if new_batch >= prev_batch:
+                        raise EnumerationFault(
+                            f.kind,
+                            "recovery ladder exhausted: batch already at "
+                            f"floor {prev_batch} "
+                            "(raise queue capacities or min_batch_size)",
+                            op=f.op, query=f.query,
+                        ) from f
+                _log.warning(
+                    "recovering from %s (attempt %d/%d): batch %d -> %d",
+                    f, retries, cfg.max_retries, prev_batch, new_batch,
+                )
+                session = EngineSession.restore(
+                    self, session.flow, snap, stats=session.stats,
+                    batch_size=new_batch,
+                    dfs_bias=not isinstance(f, ShardLoss),
+                )
+                self._queues = session.queues
+                # Counters go up *after* the restore rolled stats back to the
+                # snapshot, so recovery history survives the rollback.
+                session.stats.retries += 1
+                if isinstance(f, ShardLoss):
+                    session.stats.restarts += 1
+                else:
+                    session.stats.pressure_events += 1
+                snap = session.snapshot()
+
     def run(
         self,
         query_or_plan: QueryGraph | ExecutionPlan | Dataflow,
@@ -931,7 +1243,7 @@ class HugeEngine:
         t_start = time.perf_counter()
         session = self.prepare(query_or_plan, space, stats, session_stats=self.stats)
         self._queues = session.queues  # keeps _memory_probe over the live run
-        session.run()
+        session = self.drive(session)
         result = session.result()
         self.stats.wall_time = time.perf_counter() - t_start
         self.stats.per_machine_rows = self.balance_rows.copy()

@@ -1,0 +1,212 @@
+"""Deterministic fault injection + the structured fault taxonomy.
+
+HUGE's bounded-memory story (Theorem 5.4) and the multi-tenant service are
+only safe if failure is a *modelled* state, not an accident: RADS (Ren et
+al. 2019) made robustness-to-memory-pressure a design axis for distributed
+subgraph enumeration, and G-thinker showed spill/recompute under pressure is
+what lets these workloads survive real clusters. This module provides both
+halves of that story (DESIGN.md §Fault-tolerance):
+
+* a **taxonomy** of structured, attributable failures — every fault carries
+  its kind, the operator label it fired at, and the query name, so a service
+  log line identifies *which* tenant's *which* operator failed and whether
+  the failure is recoverable (``QueuePressure``) or terminal;
+* a **deterministic fault-injection harness** — a seeded :class:`FaultPlan`
+  threaded through ``EngineConfig`` / ``DistConfig`` / ``ServiceConfig``
+  that fires named fault kinds at specific operator invocations. The same
+  ``(seed, specs)`` always fires at the same step of the same op, so every
+  chaos-test failure replays exactly (``REPRO_FAULT_SEED`` sweeps move the
+  trigger points across the schedule without losing determinism).
+
+Fault kinds (the chaos matrix rows; see tests/test_chaos.py):
+
+====================  =====================================================
+``queue-overflow``    an operator output queue cannot absorb a batch
+                      (Lemma 5.2 slack exhausted) — recoverable by halving
+                      the batch and biasing the scheduler toward DFS
+``join-overflow``     a PUSH-JOIN probe produced more rows than
+                      ``join_out_capacity`` — recoverable the same way
+                      (a smaller right batch bounds the probe output)
+``kernel-fail``       a fused Pallas kernel failed to execute — recoverable
+                      one-shot by falling back to the ``ref.py`` twin
+``shard-loss``        a simulated machine/shard died mid-query — recoverable
+                      by restoring the last checkpoint (single-process) or
+                      deterministically re-executing the flow (SPMD)
+``lease-oom``         the slot pool transiently refused a lease at
+                      admission — recoverable by waiting for the next sweep
+====================  =====================================================
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Dict, List, Optional, Tuple
+
+FAULT_KINDS: Tuple[str, ...] = (
+    "queue-overflow",
+    "join-overflow",
+    "kernel-fail",
+    "shard-loss",
+    "lease-oom",
+)
+
+
+# ---------------------------------------------------------------------------
+# Structured failures
+# ---------------------------------------------------------------------------
+
+class EnumerationFault(RuntimeError):
+    """A structured, attributable enumeration failure.
+
+    ``kind`` names the failure class (one of :data:`FAULT_KINDS` for injected
+    faults, or an organic kind such as ``queue-overflow`` raised by a real
+    capacity breach); ``op`` is the failing operator's label and ``query``
+    the dataflow's query name, so non-recoverable failures are attributable
+    in service logs without a debugger. ``recoverable`` tells the recovery
+    ladder whether retrying under degradation can help."""
+
+    def __init__(self, kind: str, message: str, *, op: str = "?",
+                 query: str = "?", recoverable: bool = False):
+        self.kind = kind
+        self.op = op
+        self.query = query
+        self.recoverable = recoverable
+        self.session = None  # attached by _ScopedRT for service attribution
+        super().__init__(f"[{kind}] op={op} query={query or '?'}: {message}")
+
+
+class QueuePressure(EnumerationFault):
+    """Recoverable memory-pressure signal: a queue (or join output buffer)
+    could not absorb a batch. The Lemma 5.2 slack becomes a *soft* bound —
+    the recovery ladder halves the batch, biases the adaptive scheduler
+    toward DFS (drain before produce), and retries from the last
+    checkpoint instead of crashing."""
+
+    def __init__(self, kind: str, message: str, *, op: str = "?", query: str = "?"):
+        super().__init__(kind, message, op=op, query=query, recoverable=True)
+
+
+class KernelFault(EnumerationFault):
+    """A fused Pallas kernel failed; the caller falls back one-shot to the
+    pure-jnp ref twin for the affected batch (stat: ``kernel_fallbacks``)."""
+
+    def __init__(self, message: str, *, op: str = "?", query: str = "?"):
+        super().__init__("kernel-fail", message, op=op, query=query,
+                         recoverable=True)
+
+
+class ShardLoss(EnumerationFault):
+    """A (simulated) machine/shard died mid-query. Enumeration is
+    deterministic, so recovery is re-execution: restore the last checkpoint
+    (single-process sessions) or rebuild the SPMD runtimes and re-run."""
+
+    def __init__(self, shard: int, *, op: str = "?", query: str = "?"):
+        self.shard = shard
+        super().__init__("shard-loss", f"shard {shard} lost", op=op,
+                         query=query, recoverable=True)
+
+
+# ---------------------------------------------------------------------------
+# Deterministic injection
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """One planned fault: fire ``kind`` at the ``at_step``-th eligible
+    invocation of an operator whose label contains ``op`` (``"*"`` matches
+    any op). ``at_step=None`` derives the step from the plan seed, so a
+    seed sweep moves the trigger across the schedule deterministically.
+    ``times`` bounds how often the spec fires (default one-shot, so a
+    recovered retry does not re-trip the same fault forever)."""
+
+    kind: str
+    op: str = "*"
+    at_step: Optional[int] = None
+    times: int = 1
+
+    def __post_init__(self):
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(
+                f"unknown fault kind {self.kind!r}; known: {FAULT_KINDS}"
+            )
+
+
+class FaultPlan:
+    """A seeded, deterministic schedule of injected faults.
+
+    ``should_fire(kind, op)`` is the single probe the engines call at every
+    injection point; it counts eligible invocations per spec and returns
+    True exactly when a spec's trigger step is reached (and its ``times``
+    budget is not exhausted). All state is host-side counters — nothing
+    about injection touches traced code, so jit caches are fault-agnostic.
+    ``fired`` records every fired event for assertions and stats."""
+
+    def __init__(self, specs: Tuple[FaultSpec, ...] | List[FaultSpec] = (),
+                 seed: int = 0):
+        self.seed = int(seed)
+        self.specs: Tuple[FaultSpec, ...] = tuple(specs)
+        self._seen: Dict[int, int] = {i: 0 for i in range(len(self.specs))}
+        self._hits: Dict[int, int] = {i: 0 for i in range(len(self.specs))}
+        self.fired: List[Tuple[str, str, int]] = []  # (kind, op, step)
+
+    # -- construction --------------------------------------------------------
+
+    @classmethod
+    def single(cls, kind: str, op: str = "*", at_step: Optional[int] = None,
+               seed: int = 0, times: int = 1) -> "FaultPlan":
+        return cls((FaultSpec(kind, op, at_step, times),), seed=seed)
+
+    @classmethod
+    def from_env(cls, env=None) -> Optional["FaultPlan"]:
+        """Build a plan from ``REPRO_FAULT_KIND`` / ``REPRO_FAULT_SEED`` /
+        ``REPRO_FAULT_OP`` / ``REPRO_FAULT_STEP`` — the CI chaos job's
+        interface. Returns None when no kind is requested."""
+        env = os.environ if env is None else env
+        kind = env.get("REPRO_FAULT_KIND", "")
+        if not kind:
+            return None
+        step = env.get("REPRO_FAULT_STEP", "")
+        return cls.single(
+            kind,
+            op=env.get("REPRO_FAULT_OP", "*"),
+            at_step=int(step) if step else None,
+            seed=int(env.get("REPRO_FAULT_SEED", "0")),
+        )
+
+    # -- probing -------------------------------------------------------------
+
+    def _trigger_step(self, i: int) -> int:
+        spec = self.specs[i]
+        if spec.at_step is not None:
+            return spec.at_step
+        # Seed-derived trigger: a small deterministic hash spreads different
+        # (seed, spec) pairs over the first few invocations of the op, so a
+        # REPRO_FAULT_SEED sweep exercises early/mid-schedule triggers.
+        h = self.seed * 1000003 + i * 10007 + len(spec.kind) * 101
+        return (h ^ (h >> 7)) % 6
+
+    def should_fire(self, kind: str, op: str) -> bool:
+        fired = False
+        for i, spec in enumerate(self.specs):
+            if spec.kind != kind:
+                continue
+            if spec.op != "*" and spec.op.lower() not in op.lower():
+                continue  # case-insensitive: labels are uppercase (SCAN/EXT…)
+            step = self._seen[i]
+            self._seen[i] = step + 1
+            if self._hits[i] < spec.times and step >= self._trigger_step(i):
+                self._hits[i] += 1
+                self.fired.append((kind, op, step))
+                fired = True
+        return fired
+
+    def fired_count(self, kind: Optional[str] = None) -> int:
+        if kind is None:
+            return len(self.fired)
+        return sum(1 for k, _, _ in self.fired if k == kind)
+
+    def reset(self) -> None:
+        """Forget all counters (a fresh run under the same plan)."""
+        self._seen = {i: 0 for i in range(len(self.specs))}
+        self._hits = {i: 0 for i in range(len(self.specs))}
+        self.fired = []

@@ -73,9 +73,13 @@ class AdaptiveScheduler:
     the liveness check conservative, never wrong.
     """
 
-    def __init__(self, chain: List[OperatorRuntime], memory_probe=None):
+    def __init__(self, chain: List[OperatorRuntime], memory_probe=None,
+                 dfs_bias: bool = False):
         self.chain = chain
         self.memory_probe = memory_probe  # () -> (rows, bytes)
+        self.dfs_bias = dfs_bias  # one batch per visit: drain downstream
+        #   before producing more (the recovery ladder's memory-pressure mode,
+        #   DESIGN.md §Fault-tolerance)
         self.stats = ScheduleStats()
 
     def _probe(self):
@@ -121,6 +125,10 @@ class AdaptiveScheduler:
                         if budget == 0:
                             self.stats.completed = False
                             return self.stats
+                    if self.dfs_bias:
+                        # Memory-pressure mode: emit one batch, then move on
+                        # so downstream ops drain it before more is produced.
+                        break
                 stall = 0 if ran else stall + 1
                 if op.has_input():
                     self.stats.yields_full += 1  # yielded on full queue

@@ -51,6 +51,7 @@ from repro.core.engine import (
     QueueSlotPool,
     flow_queue_cells,
 )
+from repro.core.faults import EnumerationFault, FaultPlan, ShardLoss
 from repro.core.query import PAPER_QUERIES, QueryGraph
 from repro.core.scheduler import AdaptiveScheduler
 from repro.graph.storage import Graph, GraphUpdateBatch
@@ -62,6 +63,8 @@ DONE = "done"
 REJECTED = "rejected"
 BUDGET_EXCEEDED = "budget_exceeded"
 CANCELLED = "cancelled"
+FAILED = "failed"          # fault not recovered within the retry budget
+TIMED_OUT = "timed_out"    # request deadline_s expired
 
 
 @dataclasses.dataclass(frozen=True)
@@ -91,6 +94,8 @@ class GraphQueryRequest:
     query: QueryGraph | ExecutionPlan | Dataflow | str
     space: str = "huge"
     match_budget: Optional[int] = None
+    deadline_s: Optional[float] = None  # submit→finish wall-clock budget:
+    #   past it the request times out (queued or running) instead of retrying
 
 
 @dataclasses.dataclass
@@ -110,6 +115,12 @@ class QueryTicket:
     # Structured flowcheck findings when the request was rejected at
     # admission (rule ids + hints; see repro.analysis.diagnostics).
     diagnostics: Tuple[Diagnostic, ...] = ()
+    # Fault-tolerance bookkeeping: how many admissions this ticket consumed,
+    # the structured message of every fault it survived, and the earliest
+    # tick at which a requeued attempt may re-admit (retry backoff).
+    attempts: int = 0
+    failures: List[str] = dataclasses.field(default_factory=list)
+    not_before_tick: int = 0
 
     @property
     def latency_s(self) -> Optional[float]:
@@ -140,6 +151,13 @@ class ServiceConfig:
     admission_queue_len: int = 64     # beyond this, submit() rejects
     tick_steps: int = 32              # scheduler steps per active session per tick
     default_budget: TenantBudget = TenantBudget()
+    # Fault tolerance (DESIGN.md §Fault-tolerance). Every N ticks each active
+    # session is snapshotted; 0 disables checkpoints, in which case a
+    # recoverable fault restarts the query from scratch via the retry path.
+    checkpoint_every_ticks: int = 0
+    max_retries: int = 2              # re-admissions after the first attempt
+    retry_backoff_ticks: int = 2      # backoff = this * attempts ticks
+    faults: Optional[FaultPlan] = None  # service-level injection (lease-oom)
 
 
 @dataclasses.dataclass
@@ -194,6 +212,11 @@ class GraphService:
         self._tenant_inflight: Dict[str, int] = {}
         self._ids = itertools.count()
         self._planned: Dict[int, tuple] = {}  # ticket id -> (cells, flow)
+        # ticket id -> (flow, session snapshot): the newest checkpoint of each
+        # running query (taken every cfg.checkpoint_every_ticks ticks) and the
+        # pinned resume state for tickets re-admitted via ``resume``.
+        self._checkpoints: Dict[int, tuple] = {}
+        self._restore_snap: Dict[int, tuple] = {}
         self.admission: deque[QueryTicket] = deque()
         self.active: List[_Active] = []
         self._rr = 0                      # round-robin offset for tick fairness
@@ -294,8 +317,12 @@ class GraphService:
         cap (could never fit even on an idle service) are rejected."""
         admitted = 0
         still_waiting: deque[QueryTicket] = deque()
+        fp = self.cfg.faults
         while self.admission:
             ticket = self.admission.popleft()
+            if ticket.not_before_tick > self.ticks:
+                still_waiting.append(ticket)  # retry backoff not elapsed
+                continue
             if len(self.active) >= self.cfg.max_active:
                 still_waiting.append(ticket)
                 continue
@@ -327,18 +354,47 @@ class GraphService:
                              f"{self.pool.total_cells}")
                 continue
             used = self._tenant_cells.get(req.tenant, 0)
+            if fp is not None and fp.should_fire("lease-oom", "admit"):
+                # Injected transient allocator refusal: indistinguishable from
+                # a momentarily full pool, so the ticket simply waits for the
+                # next sweep (lease-oom is recoverable by construction).
+                ticket.failures.append(
+                    "[lease-oom] op=admit: injected transient lease refusal")
+                # One-tick backoff, so run_until_idle's no-progress guard
+                # sees the deferral as pending work, not a deadlock.
+                ticket.not_before_tick = max(
+                    ticket.not_before_tick, self.ticks + 1)
+                still_waiting.append(ticket)
+                continue
             if (
                 budget.max_queue_cells is not None
                 and used + cells > budget.max_queue_cells
             ) or not self.pool.try_lease(cells):
                 still_waiting.append(ticket)  # fits eventually; wait
                 continue
-            session = EngineSession(
-                self.engine, flow,
-                queue_capacity=self.cfg.queue_capacity,
-                join_buffer_capacity=self.cfg.join_buffer_capacity,
-            )
-            assert session.queue_cells == cells, "admission pricing drifted"
+            # From here the lease is held: any failure building the session
+            # must give the cells back or the pool leaks on every crash.
+            try:
+                pinned = self._restore_snap.get(ticket.id)
+                if pinned is not None:
+                    rflow, snap = pinned
+                    session = EngineSession.restore(
+                        self.engine, rflow, snap,
+                        queue_capacity=self.cfg.queue_capacity,
+                        join_buffer_capacity=self.cfg.join_buffer_capacity,
+                    )
+                else:
+                    session = EngineSession(
+                        self.engine, flow,
+                        queue_capacity=self.cfg.queue_capacity,
+                        join_buffer_capacity=self.cfg.join_buffer_capacity,
+                    )
+                assert session.queue_cells == cells, "admission pricing drifted"
+            except BaseException:
+                self.pool.release(cells)
+                raise
+            self._restore_snap.pop(ticket.id, None)
+            ticket.attempts += 1
             ticket.queue_cells = cells
             ticket.admitted_at = time.perf_counter()
             ticket.status = RUNNING
@@ -362,17 +418,33 @@ class GraphService:
 
     # -- the service tick ------------------------------------------------------
 
+    def _release_active(self, act: _Active) -> None:
+        """Return an active session's lease, tenant cells, slot, and
+        checkpoint. try/finally-audited: even if the pool raises (e.g. the
+        over-release guard), the slot and per-tenant accounting are still
+        unwound, so a fault can never strand a phantom active session."""
+        ticket = act.ticket
+        t = ticket.request.tenant
+        try:
+            self._tenant_cells[t] = max(
+                0, self._tenant_cells.get(t, 0) - ticket.queue_cells)
+            self.pool.release(ticket.queue_cells)
+        finally:
+            ticket.queue_cells = 0
+            self._checkpoints.pop(ticket.id, None)
+            if act in self.active:
+                self.active.remove(act)
+
     def _finish(self, act: _Active, status: str) -> None:
         ticket = act.ticket
         ticket.count = act.session.stats.count
         ticket.status = status
         ticket.finished_at = time.perf_counter()
         self._planned.pop(ticket.id, None)
-        t = ticket.request.tenant
-        self._tenant_cells[t] = max(0, self._tenant_cells.get(t, 0) - ticket.queue_cells)
-        self.pool.release(ticket.queue_cells)
-        self._release_inflight(ticket)
-        self.active.remove(act)
+        try:
+            self._release_active(act)
+        finally:
+            self._release_inflight(ticket)
 
     def _memory_probe(self):
         rows = sum(a.session.rows_in_flight() for a in self.active)
@@ -383,10 +455,17 @@ class GraphService:
     def tick(self) -> Dict[str, int]:
         """One service tick: admit what fits, run one shared scheduler pass
         over all active sessions (budgeted at ``tick_steps`` per session),
-        then retire sessions that completed or crossed their match budget."""
+        then retire sessions that completed or crossed their match budget.
+
+        A fault raised by any session's operator aborts only that session's
+        tick share: the owning ticket is degraded in place (checkpoint
+        restore at a smaller batch) or requeued/failed per the retry budget —
+        the other tenants' sessions are untouched and resume next tick."""
         self.ticks += 1
+        self._expire_deadlines()
         admitted = self._try_admit()
         steps = 0
+        faulted = 0
         if self.active:
             # Rotate the concatenation order so no tenant permanently owns
             # the scheduler's starting cursor (round-robin fairness).
@@ -395,8 +474,24 @@ class GraphService:
             self._rr += 1
             chain = [rt for a in order for rt in a.session.chain]
             sched = AdaptiveScheduler(chain, memory_probe=self._memory_probe)
-            st = sched.run(max_steps=self.cfg.tick_steps * len(self.active))
-            steps = st.steps
+            try:
+                st = sched.run(max_steps=self.cfg.tick_steps * len(self.active))
+                steps = st.steps
+            except EnumerationFault as f:
+                steps = sched.stats.steps
+                act = next(
+                    (a for a in self.active if a.session is f.session), None)
+                if act is None:
+                    raise  # fault outside any active session: not ours to eat
+                self._handle_fault(act, f)
+                faulted = 1
+        if (
+            self.cfg.checkpoint_every_ticks > 0
+            and self.ticks % self.cfg.checkpoint_every_ticks == 0
+        ):
+            for act in self.active:
+                self._checkpoints[act.ticket.id] = (
+                    act.session.flow, act.session.snapshot())
         completed = 0
         for act in list(self.active):
             req = act.ticket.request
@@ -412,7 +507,101 @@ class GraphService:
         if completed:
             admitted += self._try_admit()
         return {"admitted": admitted, "steps": steps, "completed": completed,
+                "faulted": faulted,
                 "active": len(self.active), "queued": len(self.admission)}
+
+    # -- fault handling (DESIGN.md §Fault-tolerance) ---------------------------
+
+    def _handle_fault(self, act: _Active, fault: EnumerationFault) -> None:
+        """Degrade in place when possible, otherwise requeue or fail.
+
+        Preference order: (1) a recoverable fault with a live checkpoint →
+        restore this session from it at half the batch size (shard-loss: same
+        batch — the replay is deterministic) with DFS-biased draining; the
+        queue capacities are repriced identically so the ticket's lease is
+        unchanged and no pool traffic occurs. (2) no checkpoint, or the
+        degradation ladder bottomed out → release everything and requeue with
+        backoff while the retry budget and deadline allow. (3) otherwise the
+        ticket fails with the structured fault message."""
+        ticket = act.ticket
+        ticket.failures.append(str(fault))
+        ckpt = self._checkpoints.get(ticket.id)
+        ecfg = self.engine.cfg
+        if fault.recoverable and ckpt is not None:
+            rflow, snap = ckpt
+            prev_batch = snap["batch_size"]
+            shard_loss = isinstance(fault, ShardLoss)
+            new_batch = prev_batch if shard_loss else max(
+                prev_batch // 2, ecfg.min_batch_size)
+            if shard_loss or new_batch < prev_batch:
+                act.session = EngineSession.restore(
+                    self.engine, rflow, snap, stats=act.session.stats,
+                    queue_capacity=self.cfg.queue_capacity,
+                    join_buffer_capacity=self.cfg.join_buffer_capacity,
+                    batch_size=new_batch,
+                    dfs_bias=not shard_loss,
+                )
+                act.session.stats.retries += 1
+                if shard_loss:
+                    act.session.stats.restarts += 1
+                else:
+                    act.session.stats.pressure_events += 1
+                ticket.stats = act.session.stats
+                # Re-checkpoint at the degraded batch so a repeat fault keeps
+                # descending the ladder instead of retrying the same size.
+                self._checkpoints[ticket.id] = (rflow, act.session.snapshot())
+                return
+        self._fail_attempt(act, fault)
+
+    def _fail_attempt(self, act: _Active, fault: EnumerationFault) -> None:
+        """Tear down a faulted session; requeue with backoff or fail the
+        ticket. The lease/slot release is audited (``_release_active``), so a
+        crashed query leaves the pool exactly where admission found it."""
+        ticket = act.ticket
+        now = time.perf_counter()
+        req = ticket.request
+        deadline_ok = (req.deadline_s is None
+                       or now - ticket.submitted_at < req.deadline_s)
+        ticket.count = act.session.stats.count  # partial progress, observable
+        try:
+            self._release_active(act)
+        finally:
+            if (fault.recoverable and deadline_ok
+                    and ticket.attempts <= self.cfg.max_retries):
+                ticket.status = QUEUED
+                ticket.stats = None
+                ticket.not_before_tick = (
+                    self.ticks + self.cfg.retry_backoff_ticks * ticket.attempts)
+                self.admission.append(ticket)
+            else:
+                ticket.status = FAILED
+                ticket.error = str(fault)
+                ticket.finished_at = now
+                self._planned.pop(ticket.id, None)
+                self._release_inflight(ticket)
+
+    def _expire_deadlines(self) -> None:
+        """Time out requests (queued or running) past their ``deadline_s``."""
+        now = time.perf_counter()
+        for act in list(self.active):
+            d = act.ticket.request.deadline_s
+            if d is not None and now - act.ticket.submitted_at > d:
+                self._finish(act, TIMED_OUT)
+                act.ticket.error = f"deadline_s={d} exceeded while running"
+        if any(t.request.deadline_s is not None for t in self.admission):
+            still: deque[QueryTicket] = deque()
+            for t in self.admission:
+                d = t.request.deadline_s
+                if d is not None and now - t.submitted_at > d:
+                    t.status = TIMED_OUT
+                    t.error = f"deadline_s={d} exceeded before admission"
+                    t.finished_at = now
+                    self._planned.pop(t.id, None)
+                    self._restore_snap.pop(t.id, None)
+                    self._release_inflight(t)
+                else:
+                    still.append(t)
+            self.admission = still
 
     def run_until_idle(self, max_ticks: int = 1_000_000) -> Dict[str, int]:
         """Tick until the admission queue and all slots drain."""
@@ -422,9 +611,12 @@ class GraphService:
                 break
             out = self.tick()
             done_total += out["completed"]
+            backing_off = any(
+                t.not_before_tick > self.ticks for t in self.admission)
             if (
                 out["steps"] == 0 and out["admitted"] == 0
-                and out["completed"] == 0 and (self.active or self.admission)
+                and out["completed"] == 0 and out["faulted"] == 0
+                and not backing_off and (self.active or self.admission)
             ):
                 raise RuntimeError(
                     "graph service made no progress: active sessions are "
@@ -437,6 +629,65 @@ class GraphService:
             "peak_pool_cells": self.peak_pool_cells,
             "peak_inflight_rows": self.peak_inflight_rows,
         }
+
+    # -- crash recovery (DESIGN.md §Fault-tolerance) ---------------------------
+
+    def snapshot(self) -> Dict[str, list]:
+        """Host-side crash-recovery state: every standing-query definition
+        (with its accumulated total) plus the newest checkpoint of each
+        running query. Running queries only appear when
+        ``cfg.checkpoint_every_ticks > 0`` — without periodic checkpoints
+        there is nothing consistent to resume from and they restart."""
+        running = []
+        for act in self.active:
+            ckpt = self._checkpoints.get(act.ticket.id)
+            if ckpt is not None:
+                running.append((act.ticket.request, ckpt[0], ckpt[1]))
+        return {
+            "standing": [
+                (sq.tenant, sq.query, sq.match_budget, sq.total_count)
+                for sq in self.standing
+            ],
+            "running": running,
+        }
+
+    @classmethod
+    def restore(
+        cls,
+        graph: Graph,
+        snap: Dict[str, list],
+        cfg: ServiceConfig | None = None,
+        engine_cfg: EngineConfig | None = None,
+        tenants: Dict[str, TenantBudget] | None = None,
+    ) -> "GraphService":
+        """Rebuild a crashed service from ``snapshot()`` output: standing
+        queries re-register (keeping their accumulated totals), and every
+        checkpointed running query is re-admitted from its device-state
+        snapshot via :meth:`resume`, so completed work is not repeated."""
+        svc = cls(graph, cfg, engine_cfg, tenants)
+        for tenant, query, match_budget, total in snap["standing"]:
+            sq = svc.register_standing(tenant, query, match_budget=match_budget)
+            sq.total_count = total
+        for req, flow, sess_snap in snap["running"]:
+            svc.resume(req, flow, sess_snap)
+        return svc
+
+    def resume(self, req: GraphQueryRequest, flow: Dataflow,
+               sess_snap: Dict[str, object]) -> QueryTicket:
+        """Re-admit an interrupted query from a checkpoint. The request rides
+        the ordinary submit→admission path (inflight caps, pool pricing,
+        first-fit sweep), but the priced flow is pinned and the session is
+        built with :meth:`EngineSession.restore` at admission instead of
+        fresh, resuming mid-enumeration with exactly-once counts."""
+        ticket = self.submit(req)
+        if ticket.status == QUEUED:
+            cells = flow_queue_cells(
+                flow, self.engine.cfg, self.engine.d_pad,
+                self.cfg.queue_capacity, self.cfg.join_buffer_capacity,
+            )
+            self._planned[ticket.id] = (cells, flow)
+            self._restore_snap[ticket.id] = (flow, sess_snap)
+        return ticket
 
     # -- standing queries over streaming updates (DESIGN.md §Delta-plans) ------
 
